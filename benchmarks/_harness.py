@@ -1,0 +1,138 @@
+"""Shared benchmark context: datasets, indexes, probing models — disk-cached.
+
+Scale note (DESIGN.md §7.4/7.5): the container is offline + 1 CPU core, so the
+paper's SIFT-1M/GloVe-1M become deterministic synthetic mixtures at 100k/60k
+scale with matched dimensionality; every method sees identical data/GT, so the
+paper's COMPARISONS (orderings, relative margins) are preserved even though
+absolute cmp values scale with N.
+"""
+from __future__ import annotations
+
+import pickle
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, build_store, kmeans_fit
+from repro.core import ground_truth as gt
+from repro.core import probing
+from repro.core import retrieval as ret
+from repro.core.redundancy import plan_redundancy, replica_rows
+from repro.core.train_probing import train_probing_model
+from repro.data import make_vector_dataset
+
+CACHE = pathlib.Path(__file__).resolve().parent / "results" / "cache"
+
+DATASETS = {
+    # name: (n, q, dim, n_modes, seed)  — SIFT-like / GloVe-like mixtures
+    "sift-like": (100_000, 2_000, 128, 160, 0),
+    "glove-like": (60_000, 1_000, 96, 120, 1),
+}
+
+
+def _cached(key: str, builder):
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"{key}.pkl"
+    if f.exists():
+        with open(f, "rb") as fh:
+            return pickle.load(fh)
+    t0 = time.time()
+    val = builder()
+    with open(f, "wb") as fh:
+        pickle.dump(val, fh)
+    print(f"  [built {key} in {time.time()-t0:.0f}s]")
+    return val
+
+
+def get_dataset(name: str):
+    n, q, dim, modes, seed = DATASETS[name]
+    return _cached(f"ds_{name}", lambda: make_vector_dataset(
+        name, n=n, n_queries=q, dim=dim, n_modes=modes, seed=seed))
+
+
+def get_partitions(name: str, b: int):
+    ds = get_dataset(name)
+
+    def build():
+        st = kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(ds.base), n_clusters=b, n_iters=20)
+        return np.asarray(st.assign), np.asarray(st.centroids)
+
+    return _cached(f"km_{name}_B{b}", build)
+
+
+def get_gt(name: str, k: int = 200):
+    ds = get_dataset(name)
+    return _cached(f"gt_{name}_k{k}", lambda: gt.exact_knn(ds.queries, ds.base, k))
+
+
+def get_train_labels(name: str, b: int, k: int = 100, n_sub: int = 30_000):
+    """kNN-partition labels for a training subset (paper appendix A.3)."""
+    ds = get_dataset(name)
+    assign, cents = get_partitions(name, b)
+
+    def build():
+        host = np.random.default_rng(7)
+        sub = host.choice(len(ds.base), n_sub, replace=False)
+        xs = ds.base[sub]
+        _, sti = gt.exact_knn(xs, xs, k, exclude_self=True)
+        part_of = assign[sub]
+        lab = np.zeros((n_sub, b), np.float32)
+        rows = np.repeat(np.arange(n_sub), sti.shape[1])
+        np.add.at(lab, (rows, part_of[sti].reshape(-1)), 1.0)
+        return sub, (lab > 0).astype(np.float32)
+
+    return _cached(f"lab_{name}_B{b}_k{k}", build)
+
+
+def get_probing_model(name: str, b: int, k: int = 100, epochs: int = 8):
+    ds = get_dataset(name)
+    assign, cents = get_partitions(name, b)
+    sub, lab = get_train_labels(name, b, k)
+
+    def build():
+        params, tlog = train_probing_model(
+            jax.random.PRNGKey(3), ds.base[sub], lab, cents, epochs=epochs, batch=512, lr=2e-3)
+        return jax.tree.map(np.asarray, params), tlog
+
+    return _cached(f"probe_{name}_B{b}_k{k}", build)
+
+
+def get_stores(name: str, b: int, k: int = 100, eta: float = 0.03):
+    """(ivf_store, fuzzy_store, lira_store) with shared centroids."""
+    ds = get_dataset(name)
+    assign, cents = get_partitions(name, b)
+    params, _ = get_probing_model(name, b, k)
+    ids = np.arange(len(ds.base), dtype=np.int32)
+
+    def build():
+        s_ivf = build_store(ds.base, ids, assign, cents)
+        s_fuzzy = baselines.build_ivf_fuzzy(jax.random.PRNGKey(0), ds.base, b)
+        plan = plan_redundancy(params, ds.base, assign, cents, eta=eta)
+        extra = replica_rows(plan, ds.base, ids)
+        s_lira = build_store(ds.base, ids, assign, cents, extra=extra)
+        return s_ivf, s_fuzzy, s_lira
+
+    return _cached(f"stores_{name}_B{b}_k{k}_eta{eta}", build)
+
+
+def get_ptk(name: str, b: int, store_key: str, store, k: int = 100):
+    """Within-partition top-k tables (the heavy pass) — cached per store."""
+    ds = get_dataset(name)
+    return _cached(f"ptk_{name}_B{b}_{store_key}_k{k}",
+                   lambda: ret.partition_topk(store, ds.queries, k))
+
+
+def lira_probs(name: str, b: int, store, k: int = 100):
+    ds = get_dataset(name)
+    params, _ = get_probing_model(name, b, k)
+    cd = ret.lira_inputs(store, ds.queries)
+    p = probing.probs(jax.tree.map(jnp.asarray, params), jnp.asarray(ds.queries), jnp.asarray(cd))
+    return np.asarray(p), cd
+
+
+def sweep_method(ptk, gti, k, probe_masks: dict):
+    """Evaluate a dict of {setting: mask} -> list of (setting, SearchResult)."""
+    return [(s, ret.evaluate_probe(ptk, m, gti, k)) for s, m in probe_masks.items()]

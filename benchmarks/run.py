@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (and tees them to results/bench.csv).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig7]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+SUITES = [
+    ("fig2", "benchmarks.fig2_motivation"),
+    ("fig11", "benchmarks.fig11_convergence"),
+    ("table1", "benchmarks.table1_vary_k"),
+    ("fig7", "benchmarks.fig7_8_tradeoff"),
+    ("fig13", "benchmarks.fig13_eta"),
+    ("fig14", "benchmarks.fig14_B"),
+    ("table2", "benchmarks.table2_large_scale"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated suite names")
+    args = ap.parse_args()
+    only = {s for s in args.only.split(",") if s}
+
+    out_path = pathlib.Path(__file__).resolve().parent / "results" / "bench.csv"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    rows = ["name,us_per_call,derived"]
+    print(rows[0])
+
+    def emit(name: str, us: float, derived: str):
+        line = f"{name},{us:.1f},{derived}"
+        rows.append(line)
+        print(line, flush=True)
+
+    import importlib
+
+    t_all = time.time()
+    for tag, mod_name in SUITES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.run(emit)
+            emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # keep the harness going; record the failure
+            emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, f"FAIL:{type(e).__name__}:{e}")
+            import traceback
+
+            traceback.print_exc()
+    emit("_total_seconds", (time.time() - t_all) * 1e6, "")
+    out_path.write_text("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

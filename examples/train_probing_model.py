@@ -1,0 +1,58 @@
+"""Fault-tolerant distributed-style training driver for the probing model:
+Trainer + atomic checkpoints + deterministic resumable pipeline. Kill it
+mid-run (Ctrl-C) and re-run — it resumes from the last checkpoint and ends in
+the same state.
+
+    PYTHONPATH=src python examples/train_probing_model.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core import ground_truth as gt, kmeans_fit, probing
+from repro.core.kmeans import centroid_distances
+from repro.data import make_vector_dataset
+from repro.data.pipeline import PipelineSpec, ProbingPipeline
+from repro.train import optimizer as opt
+from repro.train.trainer import Trainer
+
+
+def main():
+    b, k = 32, 10
+    ds = make_vector_dataset(n=20_000, n_queries=100, dim=64, n_modes=64, seed=3)
+    st = kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(ds.base), n_clusters=b, n_iters=12)
+    assign, cents = np.asarray(st.assign), np.asarray(st.centroids)
+
+    sub = np.random.default_rng(0).choice(len(ds.base), 6000, replace=False)
+    xs = ds.base[sub]
+    _, sti = gt.exact_knn(xs, xs, k, exclude_self=True)
+    lab = np.zeros((len(sub), b), np.float32)
+    np.add.at(lab, (np.repeat(np.arange(len(sub)), k), assign[sub][sti].reshape(-1)), 1.0)
+    lab = (lab > 0).astype(np.float32)
+    cd = np.asarray(centroid_distances(jnp.asarray(xs), jnp.asarray(cents)))
+
+    pc = probing.ProbingConfig(dim=xs.shape[1], n_partitions=b)
+    params = probing.init(jax.random.PRNGKey(1), pc)
+    tx = opt.adamw(opt.cosine_schedule(2e-3, 50, 2000))
+
+    def step_fn(state, batch):
+        p, s = state
+        loss, grads = jax.value_and_grad(probing.bce_loss)(
+            p, batch["q"], batch["cent_dist"], batch["labels"])
+        grads, gnorm = opt.clip_by_global_norm(grads, 1.0)
+        updates, s = tx.update(grads, s, p)
+        return (opt.apply_updates(p, updates), s), {"loss": loss, "grad_norm": gnorm}
+
+    pipeline = ProbingPipeline(PipelineSpec(global_batch=256, seed=0), xs, cd, lab)
+    trainer = Trainer(step_fn, (params, tx.init(params)), pipeline,
+                      ckpt_manager=CheckpointManager("/tmp/lira_probe_ckpt", keep=3),
+                      ckpt_every=100, log_every=50)
+    print(f"starting at step {trainer.start_step} (0 = fresh, >0 = resumed)")
+    state, history = trainer.run(600)
+    for h in history[-4:]:
+        print(h)
+
+
+if __name__ == "__main__":
+    main()

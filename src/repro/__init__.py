@@ -1,0 +1,15 @@
+"""repro: LIRA (WWW'25) — learning-based query-aware partitioned ANN search on TPU pods.
+
+Layers:
+  repro.core         — the paper's contribution (probing model, redundancy, retrieval)
+  repro.kernels      — Pallas TPU kernels for the scoring hot path
+  repro.models       — assigned architectures (LM / GNN / recsys)
+  repro.data         — synthetic datasets + resumable pipeline + graph sampler
+  repro.train        — optimizer, trainer, gradient compression
+  repro.ckpt         — atomic sharded checkpointing
+  repro.serving      — distributed LIRA serving engine
+  repro.distributed  — sharding rules + collective helpers + fault sim
+  repro.launch       — production mesh, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,44 @@
+"""Architecture registry: ``get_config(arch_id)`` -> (config, shapes).
+
+10 assigned architectures + the paper's own system (lira-ann). Each module
+defines CONFIG, SHAPES and SMOKE (a reduced same-family config for CPU tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "qwen3_moe_235b_a22b",
+    "moonshot_v1_16b_a3b",
+    "deepseek_coder_33b",
+    "mistral_large_123b",
+    "stablelm_3b",
+    "dimenet",
+    "deepfm",
+    "autoint",
+    "mind",
+    "dlrm_rm2",
+    "lira_ann",
+)
+
+# CLI ids use dashes
+def canon(arch: str) -> str:
+    return arch.replace("-", "_")
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.CONFIG, mod.SHAPES
+
+
+def get_smoke(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canon(arch)}")
+    return mod.SMOKE, getattr(mod, "SMOKE_SHAPES", None)
+
+
+def all_cells():
+    """Every (arch, shape) dry-run cell."""
+    for arch in ARCH_IDS:
+        cfg, shapes = get_config(arch)
+        for shape in shapes:
+            yield arch, cfg, shape

@@ -1,0 +1,18 @@
+"""lira-ann — the paper's own system (WWW'25): B=1024 partitions over a 67M-
+point store (large-scale setting, paper §4.1), probing-model meta index,
+distributed serve + probe-train steps."""
+from repro.configs.base import LiraSystemConfig, LIRA_SHAPES
+from repro.models.api import ShapeSpec
+
+CONFIG = LiraSystemConfig(
+    arch="lira-ann", dim=128, n_partitions=1024, capacity=65536, k=100,
+    nprobe_max=64,
+)
+SHAPES = LIRA_SHAPES
+
+SMOKE = LiraSystemConfig(
+    arch="lira-smoke", dim=16, n_partitions=16, capacity=64, k=10,
+    nprobe_max=4,
+)
+SMOKE_SHAPES = (ShapeSpec("serve_sm", "lira_serve", {"n_queries": 64}),
+                ShapeSpec("train_sm", "lira_train", {"batch": 64}))

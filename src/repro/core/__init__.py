@@ -1,0 +1,16 @@
+"""The paper's primary contribution: LIRA meta index for partitioned ANN search.
+
+Modules:
+  kmeans         — partition initialization (+ centroid distances `I`)
+  partitions     — padded PartitionStore (static-shape inverted lists) + mini-IVF
+  probing        — probing model f(q, I) = p̂ (paper §3.2)
+  train_probing  — BCE training loop with convergence telemetry (Fig 11)
+  redundancy     — learning-based pick/duplicate (paper §3.3)
+  retrieval      — query-aware top-k + evaluation engine (recall/cmp/nprobe)
+  baselines      — IVF / IVFFuzzy / IVFPQ / BLISS-lite
+  pq             — product quantization (ADC == reconstruction-L2 fact)
+  ground_truth   — exact kNN, kNN count distributions, nprobe*/nprobe*_dist
+  metrics        — paper metrics + pareto helpers
+"""
+from repro.core.partitions import PAD_ID, PartitionStore, attach_internal_index, build_store, store_stats  # noqa: F401
+from repro.core.kmeans import KMeansState, centroid_distances, kmeans_fit  # noqa: F401

@@ -1,0 +1,161 @@
+"""Baselines from the paper (§4.1): IVF, IVFFuzzy, IVFPQ, BLISS-lite.
+
+All share the PartitionStore + evaluation engine so accounting (recall / cmp /
+nprobe) is identical across methods — only the probe policy and the store
+construction differ, exactly as in the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq as pqmod
+from repro.core.kmeans import centroid_distances, kmeans_fit
+from repro.core.partitions import PartitionStore, build_store
+
+
+def build_ivf(rng, x: np.ndarray, b: int, *, n_iters: int = 20) -> PartitionStore:
+    """Vanilla IVF (Faiss IVFFlat equivalent): K-Means + nearest-centroid lists."""
+    st = kmeans_fit(rng, jnp.asarray(x, jnp.float32), n_clusters=b, n_iters=n_iters)
+    ids = np.arange(len(x), dtype=np.int32)
+    return build_store(x, ids, np.asarray(st.assign), np.asarray(st.centroids))
+
+
+def build_ivf_fuzzy(rng, x: np.ndarray, b: int, *, n_iters: int = 20) -> PartitionStore:
+    """IVFFuzzy: every point goes to its TWO nearest clusters (paper §4.1)."""
+    st = kmeans_fit(rng, jnp.asarray(x, jnp.float32), n_clusters=b, n_iters=n_iters)
+    cents = np.asarray(st.centroids)
+    d2 = np.asarray(centroid_distances(jnp.asarray(x, jnp.float32), st.centroids))
+    near2 = np.argsort(d2, axis=1)[:, :2].astype(np.int32)
+    ids = np.arange(len(x), dtype=np.int32)
+    return build_store(
+        x, ids, near2[:, 0], cents,
+        extra=(x.astype(np.float32), ids, near2[:, 1]),
+    )
+
+
+class IVFPQIndex(NamedTuple):
+    store: PartitionStore          # reconstructed vectors (ADC-exact evaluation)
+    pq: pqmod.PQCodebook
+    codes: np.ndarray              # [N, m]
+    assign: np.ndarray
+
+
+def build_ivfpq(rng, x: np.ndarray, b: int, *, m: int = 16, ks: int = 256, n_iters: int = 20) -> IVFPQIndex:
+    """IVFPQ with residual encoding: store holds centroid + decode(PQ(residual)).
+    partition_topk over this store ranks EXACTLY as LUT-based ADC (see pq.py)."""
+    k1, k2 = jax.random.split(rng)
+    st = kmeans_fit(k1, jnp.asarray(x, jnp.float32), n_clusters=b, n_iters=n_iters)
+    assign = np.asarray(st.assign)
+    cents = np.asarray(st.centroids)
+    resid = x.astype(np.float32) - cents[assign]
+    pq = pqmod.train_pq(k2, resid, m=m, ks=ks)
+    codes = pqmod.encode(pq, resid)
+    recon = cents[assign] + pqmod.decode(pq, codes)
+    ids = np.arange(len(x), dtype=np.int32)
+    store = build_store(recon, ids, assign, cents)
+    return IVFPQIndex(store=store, pq=pq, codes=codes, assign=assign)
+
+
+# ------------------------------------------------------------------ BLISS-lite
+
+class BlissGroup(NamedTuple):
+    store: PartitionStore
+    params: dict                  # routing MLP params
+    assign: np.ndarray
+
+
+def _mlp_init(rng, sizes):
+    params = []
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        rng, k = jax.random.split(rng)
+        params.append({
+            "w": jax.random.normal(k, (fan_in, fan_out), jnp.float32) * jnp.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((fan_out,), jnp.float32),
+        })
+    return params
+
+
+def _mlp_apply(params, x):
+    for i, l in enumerate(params):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(params):
+            x = jax.nn.relu(x)
+    return x
+
+
+def build_bliss(
+    rng,
+    x: np.ndarray,
+    b: int,
+    *,
+    n_groups: int = 4,
+    knn_ids: np.ndarray | None = None,
+    reparts: int = 2,
+    epochs: int = 3,
+    hidden: int = 128,
+) -> list[BlissGroup]:
+    """BLISS (Gupta et al. KDD'22), reduced: ``n_groups`` independent
+    (model, partition) pairs trained by iterative re-partitioning — the model
+    learns to map a point to the partitions of its kNN, points are reassigned
+    to their argmax partition, repeat. knn_ids: precomputed kNN of x (for the
+    learning signal); falls back to random init labels when absent."""
+    from repro.train import optimizer as opt
+
+    n, d = x.shape
+    xj = jnp.asarray(x, jnp.float32)
+    groups = []
+    for g in range(n_groups):
+        rng, kg, ki = jax.random.split(rng, 3)
+        # group-specific random init: hash-like random balanced assignment
+        assign = np.asarray(jax.random.randint(kg, (n,), 0, b), np.int32)
+        params = _mlp_init(ki, (d, hidden, b))
+        tx = opt.adamw(1e-3)
+        state = tx.init(params)
+
+        @jax.jit
+        def step(params, state, xb, yb):
+            def loss_fn(p):
+                logits = _mlp_apply(p, xb)
+                logp = jax.nn.log_softmax(logits)
+                return -(yb * logp).sum(-1).mean()
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, state = tx.update(grads, state, params)
+            return opt.apply_updates(params, updates), state, loss
+
+        host = np.random.default_rng(g)
+        for it in range(reparts):
+            # labels: distribution over partitions of the point's kNN (soft)
+            if knn_ids is not None:
+                lab = np.zeros((n, b), np.float32)
+                rows = np.repeat(np.arange(n), knn_ids.shape[1])
+                np.add.at(lab, (rows, assign[knn_ids].reshape(-1)), 1.0)
+                lab /= lab.sum(-1, keepdims=True)
+            else:
+                lab = np.eye(b, dtype=np.float32)[assign]
+            for ep in range(epochs):
+                perm = host.permutation(n)
+                for s in range(0, n - 511, 512):
+                    sel = perm[s : s + 512]
+                    params, state, _ = step(params, state, xj[sel], jnp.asarray(lab[sel]))
+            # re-partition: argmax of model scores (BLISS's unbalanced step)
+            logits = np.asarray(_mlp_apply(params, xj))
+            assign = logits.argmax(-1).astype(np.int32)
+
+        # centroids for bookkeeping (means of final groups; empty -> zeros)
+        cents = np.zeros((b, d), np.float32)
+        for p in range(b):
+            m = assign == p
+            if m.any():
+                cents[p] = x[m].mean(0)
+        ids = np.arange(n, dtype=np.int32)
+        store = build_store(x, ids, assign, cents)
+        groups.append(BlissGroup(store=store, params=params, assign=assign))
+    return groups
+
+
+def bliss_scores(group: BlissGroup, queries: np.ndarray) -> np.ndarray:
+    return np.asarray(_mlp_apply(group.params, jnp.asarray(queries, jnp.float32)))

@@ -1,0 +1,95 @@
+"""Product quantization (IVFPQ baseline; Jégou et al. TPAMI'11).
+
+ADC fact used by the evaluation engine: with orthogonal subspace decomposition,
+ADC distance == exact L2 between the query and the RECONSTRUCTED point
+(centroid + decoded residual for IVFPQ). So recall-accurate IVFPQ evaluation =
+partition_topk over reconstructions (GEMM-bound, fast on CPU), while the
+kernel-accurate LUT path lives in repro.kernels.pq_adc for TPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans_fit
+
+
+class PQCodebook(NamedTuple):
+    codebooks: jax.Array  # [m, ks, d_sub] f32
+    m: int
+    ks: int
+
+
+def train_pq(rng: jax.Array, x: np.ndarray, m: int = 16, ks: int = 256, n_iters: int = 15) -> PQCodebook:
+    n, d = x.shape
+    assert d % m == 0, f"dim {d} not divisible by m={m}"
+    d_sub = d // m
+    xs = jnp.asarray(x, jnp.float32).reshape(n, m, d_sub)
+    rngs = jax.random.split(rng, m)
+    cbs = []
+    for j in range(m):  # python loop: m small, keeps peak memory low
+        st = kmeans_fit(rngs[j], xs[:, j], n_clusters=ks, n_iters=n_iters)
+        cbs.append(st.centroids)
+    return PQCodebook(codebooks=jnp.stack(cbs), m=m, ks=ks)
+
+
+def encode(pq: PQCodebook, x: np.ndarray, *, batch: int = 8192) -> np.ndarray:
+    """x -> codes [N, m] uint8/uint16."""
+    n, d = x.shape
+    d_sub = d // pq.m
+    out = np.empty((n, pq.m), np.int32)
+
+    @jax.jit
+    def enc(xb):
+        xb = xb.reshape(xb.shape[0], pq.m, d_sub)
+        d2 = (
+            jnp.sum(xb * xb, -1)[..., None]
+            - 2.0 * jnp.einsum("nmd,mkd->nmk", xb, pq.codebooks)
+            + jnp.sum(pq.codebooks * pq.codebooks, -1)[None]
+        )
+        return jnp.argmin(d2, -1).astype(jnp.int32)
+
+    for s in range(0, n, batch):
+        out[s : s + batch] = np.asarray(enc(jnp.asarray(x[s : s + batch], jnp.float32)))
+    return out
+
+
+def decode(pq: PQCodebook, codes: np.ndarray, *, batch: int = 65536) -> np.ndarray:
+    """codes -> reconstructed vectors [N, d]."""
+    n = codes.shape[0]
+    d_sub = pq.codebooks.shape[-1]
+    out = np.empty((n, pq.m * d_sub), np.float32)
+
+    @jax.jit
+    def dec(cb):
+        recon = jnp.take_along_axis(pq.codebooks[None], cb[:, :, None, None], axis=2)
+        return recon[:, :, 0, :].reshape(cb.shape[0], -1)
+
+    for s in range(0, n, batch):
+        out[s : s + batch] = np.asarray(dec(jnp.asarray(codes[s : s + batch])))
+    return out
+
+
+def adc_lut(pq: PQCodebook, q: jax.Array) -> jax.Array:
+    """Per-query LUT of subspace distances: [Q, m, ks]."""
+    qs = q.reshape(q.shape[0], pq.m, -1)
+    return (
+        jnp.sum(qs * qs, -1)[..., None]
+        - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, pq.codebooks)
+        + jnp.sum(pq.codebooks * pq.codebooks, -1)[None]
+    )
+
+
+def adc_distances(pq: PQCodebook, q: jax.Array, codes: jax.Array) -> jax.Array:
+    """Exact ADC: dist[q, n] = sum_m LUT[q, m, codes[n, m]] -> [Q, N].
+    This is the jnp oracle for the Pallas pq_adc kernel."""
+    lut = adc_lut(pq, q)  # [Q, m, ks]
+    codes_t = codes.astype(jnp.int32).T  # [m, N]
+
+    def per_query(lq):  # lq: [m, ks]
+        return jnp.sum(jnp.take_along_axis(lq, codes_t, axis=1), axis=0)  # [N]
+
+    return jax.vmap(per_query)(lut)

@@ -1,0 +1,93 @@
+"""The LIRA probing model (paper §3.2).
+
+f(q, I) = p̂ — a multivariate binary classifier over partitions:
+    x_q = φ_q(q); x_I = φ_I(I); p̂ = sigmoid(φ_p(x_q ⊕ x_I))        (paper eq. 2)
+
+trained with per-partition BCE against the binary kNN-partition distribution
+(paper eq. 3). Pure functional JAX (init/apply), so the same module is used:
+  * on host for index building (redundancy),
+  * fused into the distributed serve_step,
+  * as the training step lowered in the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class ProbingConfig(NamedTuple):
+    dim: int                # query vector dim d
+    n_partitions: int       # B
+    q_hidden: Sequence[int] = (256, 128)   # φ_q widths
+    i_hidden: Sequence[int] = (128,)       # φ_I widths
+    p_hidden: Sequence[int] = (256,)       # φ_p widths (before final B-logit layer)
+    dtype: jnp.dtype = jnp.float32
+
+
+def _mlp_init(rng, sizes, dtype):
+    params = []
+    for i, (fan_in, fan_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        rng, k = jax.random.split(rng)
+        w = jax.random.normal(k, (fan_in, fan_out), dtype) * jnp.sqrt(2.0 / fan_in)
+        params.append({"w": w, "b": jnp.zeros((fan_out,), dtype)})
+    return params
+
+
+def _mlp_apply(params, x, *, final_act=True):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if final_act or i + 1 < len(params):
+            x = jax.nn.relu(x)
+    return x
+
+
+def init(rng: jax.Array, cfg: ProbingConfig):
+    kq, ki, kp = jax.random.split(rng, 3)
+    q_sizes = (cfg.dim, *cfg.q_hidden)
+    i_sizes = (cfg.n_partitions, *cfg.i_hidden)
+    p_in = cfg.q_hidden[-1] + cfg.i_hidden[-1]
+    p_sizes = (p_in, *cfg.p_hidden, cfg.n_partitions)
+    return {
+        "phi_q": _mlp_init(kq, q_sizes, cfg.dtype),
+        "phi_i": _mlp_init(ki, i_sizes, cfg.dtype),
+        "phi_p": _mlp_init(kp, p_sizes, cfg.dtype),
+    }
+
+
+def apply(params, q: jax.Array, cent_dist: jax.Array) -> jax.Array:
+    """Logits over partitions. q: [.., d], cent_dist: [.., B] -> [.., B]."""
+    # Normalize inputs for stable training: queries scale-normalized, distances
+    # whitened per-row (rank information is what matters, cf. paper Fig 4).
+    qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    i_feat = cent_dist / (jnp.mean(cent_dist, axis=-1, keepdims=True) + 1e-6) - 1.0
+    x_q = _mlp_apply(params["phi_q"], qn)
+    x_i = _mlp_apply(params["phi_i"], i_feat)
+    return _mlp_apply(params["phi_p"], jnp.concatenate([x_q, x_i], axis=-1), final_act=False)
+
+
+def probs(params, q, cent_dist):
+    return jax.nn.sigmoid(apply(params, q, cent_dist))
+
+
+def bce_loss(params, q, cent_dist, labels, *, pos_weight: float = 1.0):
+    """Paper eq. 3 (optionally positive-class weighted: labels are sparse)."""
+    logits = apply(params, q, cent_dist)
+    logp = jax.nn.log_sigmoid(logits)
+    lognp = jax.nn.log_sigmoid(-logits)
+    per = -(pos_weight * labels * logp + (1.0 - labels) * lognp)
+    return per.sum(-1).mean()
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def predict_probe_mask(params, q, cent_dist, sigma: float = 0.5):
+    """Partitions with p̂ > σ (query-adaptive nprobe). Returns (mask, probs)."""
+    p = probs(params, q, cent_dist)
+    return p > sigma, p
+
+
+def predicted_nprobe(params, q, cent_dist, sigma: float = 0.5) -> jax.Array:
+    mask, _ = predict_probe_mask(params, q, cent_dist, sigma)
+    return mask.sum(-1)

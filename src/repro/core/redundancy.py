@@ -1,0 +1,91 @@
+"""Learning-based redundancy (paper §3.3).
+
+Two decisions, both answered by the probing model instead of O(N²·d) global kNN:
+
+  PICK:      points whose own predicted nprobe (Σ 1[p̂_b > σ]) is in the top-η
+             percentile are likely long-tail/boundary points (paper Fig 4 LEFT).
+  DUPLICATE: a picked point v is copied into the partition with the highest
+             predicted probability p̂_b^v among partitions that do not already
+             hold v (paper Fig 4 MIDDLE/RIGHT: high-p̂ partitions are v's replica
+             partitions; if v is not in the top-ranked partition, duplicate
+             there, else into the second-ranked).
+
+``max_replicas`` generalizes the paper's 1-replica scheme (η=100% two-level runs
+duplicate every point once, matching IVFFuzzy's budget).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import probing
+from repro.core.kmeans import centroid_distances
+
+
+class RedundancyPlan(NamedTuple):
+    picked: np.ndarray        # [P] indices of duplicated points
+    targets: np.ndarray       # [P, R] partition id(s) each replica goes to
+    pred_nprobe: np.ndarray   # [N] predicted nprobe of every point
+
+
+def plan_redundancy(
+    params,
+    x: np.ndarray,
+    assign: np.ndarray,
+    centroids: np.ndarray,
+    *,
+    eta: float,
+    sigma: float = 0.5,
+    max_replicas: int = 1,
+    batch: int = 8192,
+) -> RedundancyPlan:
+    """Runs the probing model over all data points (blocked) and picks/places."""
+    n = len(x)
+    pred_np = np.empty(n, np.int32)
+    top_parts = np.empty((n, max_replicas + 1), np.int32)
+    for s in range(0, n, batch):
+        xb = jnp.asarray(x[s : s + batch], jnp.float32)
+        cd = centroid_distances(xb, jnp.asarray(centroids))
+        p = probing.probs(params, xb, cd)
+        pred_np[s : s + batch] = np.asarray((p > sigma).sum(-1), np.int32)
+        # +1 slot so we can skip the point's own partition
+        _, idx = jax.lax.top_k(p, max_replicas + 1)
+        top_parts[s : s + batch] = np.asarray(idx, np.int32)
+
+    n_pick = int(round(n * eta))
+    if n_pick == 0:
+        return RedundancyPlan(np.empty(0, np.int64), np.empty((0, max_replicas), np.int32), pred_np)
+    # top-η percentile of predicted nprobe (ties broken arbitrarily)
+    picked = np.argpartition(-pred_np, n_pick - 1)[:n_pick]
+
+    # Target = highest-p̂ partition that is not the point's home partition.
+    tp = top_parts[picked]           # [P, R+1]
+    home = assign[picked][:, None]   # [P, 1]
+    targets = np.empty((n_pick, max_replicas), np.int32)
+    for r in range(max_replicas):
+        # walk the ranked list, skipping the home partition once
+        cand = tp[:, r]
+        clash = cand == home[:, 0]
+        cand = np.where(clash, tp[:, r + 1], cand)
+        targets[:, r] = cand
+        home = np.concatenate([home, targets[:, r : r + 1]], axis=1)[:, :1]  # keep home only
+    return RedundancyPlan(picked=picked, targets=targets, pred_nprobe=pred_np)
+
+
+def replica_rows(plan: RedundancyPlan, x: np.ndarray, ids: np.ndarray):
+    """Materialize replica (vectors, ids, assigns) for PartitionStore.build_store."""
+    if len(plan.picked) == 0:
+        return (np.empty((0, x.shape[1]), np.float32), np.empty(0, np.int32), np.empty(0, np.int32))
+    reps_v, reps_i, reps_a = [], [], []
+    for r in range(plan.targets.shape[1]):
+        reps_v.append(x[plan.picked])
+        reps_i.append(ids[plan.picked])
+        reps_a.append(plan.targets[:, r])
+    return (
+        np.concatenate(reps_v, 0).astype(np.float32),
+        np.concatenate(reps_i, 0).astype(np.int32),
+        np.concatenate(reps_a, 0).astype(np.int32),
+    )

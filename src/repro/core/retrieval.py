@@ -1,0 +1,202 @@
+"""Query-aware top-k retrieval + the evaluation engine (paper §3.4, §4).
+
+Two execution paths:
+
+1. ``PartitionTopK`` (this file): the *evaluation engine*. One heavy blocked
+   pass computes, for every (query, partition), the within-partition top-k
+   (distances + ids). Afterwards ANY probe policy (IVF rank, LIRA σ-threshold,
+   BLISS groups, fixed-nprobe variants, σ sweeps…) is evaluated in milliseconds
+   by masking + merging — recall / cmp / nprobe accounting exactly matches the
+   paper's definitions. This is how we sweep Figs 7/8/13/14 on CPU.
+
+2. ``repro.serving.engine``: the TPU execution path (shard_map + Pallas fused
+   gather-score-topk) used for the dry-run / roofline; numerics identical.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import centroid_distances
+from repro.core.partitions import PAD_ID, PartitionStore
+
+
+class PartitionTopK(NamedTuple):
+    dists: np.ndarray  # [Q, B, k'] within-partition top-k' sq distances (inf-padded)
+    ids: np.ndarray    # [Q, B, k'] matching ids (PAD_ID-padded)
+    counts: np.ndarray # [B] true partition fill (for cmp accounting)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _block_topk(q, vecs, ids, k):
+    # q: [qb, d]; vecs: [B, cap, d]; ids: [B, cap]
+    d2 = (
+        jnp.sum(q * q, -1)[:, None, None]
+        - 2.0 * jnp.einsum("qd,bcd->qbc", q, vecs)
+        + jnp.sum(vecs * vecs, -1)[None]
+    )  # [qb, B, cap]
+    d2 = jnp.where(ids[None] == PAD_ID, jnp.inf, d2)
+    neg, pos = jax.lax.top_k(-d2, k)  # over cap
+    return -neg, jnp.take_along_axis(jnp.broadcast_to(ids[None], d2.shape), pos, -1)
+
+
+def partition_topk(store: PartitionStore, queries: np.ndarray, k: int, *, q_batch: int = 128) -> PartitionTopK:
+    """Blocked within-partition top-k for all queries. O(Q·N·d) GEMM-bound."""
+    k = min(k, store.capacity)
+    q = np.asarray(queries, np.float32)
+    out_d = np.empty((len(q), store.n_partitions, k), np.float32)
+    out_i = np.empty((len(q), store.n_partitions, k), np.int32)
+    for s in range(0, len(q), q_batch):
+        d, i = _block_topk(jnp.asarray(q[s : s + q_batch]), store.vectors, store.ids, k)
+        out_d[s : s + q_batch] = np.asarray(d)
+        out_i[s : s + q_batch] = np.asarray(i)
+    return PartitionTopK(out_d, out_i, np.asarray(store.counts))
+
+
+# ----------------------------------------------------------------- probe policies
+
+def probe_ivf(cent_dist: np.ndarray, nprobe: int) -> np.ndarray:
+    """IVF: nearest-`nprobe` centroids. [Q, B] bool."""
+    rank = np.argsort(np.argsort(cent_dist, -1), -1)
+    return rank < nprobe
+
+
+def probe_lira(p_hat: np.ndarray, sigma: float) -> np.ndarray:
+    """LIRA: p̂ > σ, guaranteeing at least the argmax partition."""
+    mask = p_hat > sigma
+    best = p_hat.argmax(-1)
+    mask[np.arange(len(mask)), best] = True
+    return mask
+
+
+def probe_topn(score: np.ndarray, nprobe: int) -> np.ndarray:
+    """Fixed-nprobe by any score (LIRA-fix-nprobe variant; BLISS per group)."""
+    rank = np.argsort(np.argsort(-score, -1), -1)
+    return rank < nprobe
+
+
+# ----------------------------------------------------------------- evaluation
+
+class SearchResult(NamedTuple):
+    recall: float
+    cmp_mean: float          # mean visited points per query (paper `cmp`)
+    nprobe_mean: float
+    per_query_cmp: np.ndarray
+    per_query_nprobe: np.ndarray
+    per_query_recall: np.ndarray
+
+
+def evaluate_probe(
+    ptk: PartitionTopK,
+    probe_mask: np.ndarray,
+    gt_ids: np.ndarray,
+    k: int,
+    *,
+    dedup_pool: int = 2,
+) -> SearchResult:
+    """Merge within-partition top-k of probed partitions; exact re-rank; dedup
+    replica ids (redundant stores repeat an id across partitions)."""
+    qn, b, kk = ptk.dists.shape
+    masked = np.where(probe_mask[:, :, None], ptk.dists, np.inf).reshape(qn, b * kk)
+    flat_ids = np.broadcast_to(ptk.ids.reshape(qn, b * kk), masked.shape)
+    pool = min(dedup_pool * k, masked.shape[1])
+    part = np.argpartition(masked, pool - 1, axis=1)[:, :pool]
+    pool_d = np.take_along_axis(masked, part, 1)
+    pool_i = np.take_along_axis(flat_ids, part, 1)
+    order = np.argsort(pool_d, 1)
+    pool_d = np.take_along_axis(pool_d, order, 1)
+    pool_i = np.take_along_axis(pool_i, order, 1)
+
+    hits = np.zeros(qn, np.float64)
+    for r in range(qn):
+        seen: set = set()
+        res = []
+        for c in range(pool):
+            i = int(pool_i[r, c])
+            if i == PAD_ID or not np.isfinite(pool_d[r, c]) or i in seen:
+                continue
+            seen.add(i)
+            res.append(i)
+            if len(res) == k:
+                break
+        hits[r] = len(set(res) & set(gt_ids[r, :k].tolist()))
+
+    per_recall = hits / k
+    per_cmp = (probe_mask * ptk.counts[None, :]).sum(-1)
+    per_np = probe_mask.sum(-1)
+    return SearchResult(
+        recall=float(per_recall.mean()),
+        cmp_mean=float(per_cmp.mean()),
+        nprobe_mean=float(per_np.mean()),
+        per_query_cmp=per_cmp,
+        per_query_nprobe=per_np,
+        per_query_recall=per_recall,
+    )
+
+
+def merge_groups(
+    ptks: list[PartitionTopK],
+    masks: list[np.ndarray],
+    gt_ids: np.ndarray,
+    k: int,
+    assigns: list[np.ndarray],
+    n_base: int,
+    *,
+    q_block: int = 512,
+) -> SearchResult:
+    """BLISS-style multi-group merge with EXACT dedup'd cmp accounting:
+    visited(q) = |∪_g {points whose group-g partition is probed}|."""
+    qn = masks[0].shape[0]
+    # recall via per-group pools
+    pools_d, pools_i = [], []
+    for ptk, m in zip(ptks, masks):
+        b, kk = ptk.dists.shape[1:]
+        md = np.where(m[:, :, None], ptk.dists, np.inf).reshape(qn, b * kk)
+        mi = ptk.ids.reshape(qn, b * kk)
+        take = min(k, md.shape[1])
+        part = np.argpartition(md, take - 1, 1)[:, :take]
+        pools_d.append(np.take_along_axis(md, part, 1))
+        pools_i.append(np.take_along_axis(mi, part, 1))
+    pd = np.concatenate(pools_d, 1)
+    pi = np.concatenate(pools_i, 1)
+    order = np.argsort(pd, 1)
+    pd = np.take_along_axis(pd, order, 1)
+    pi = np.take_along_axis(pi, order, 1)
+    hits = np.zeros(qn)
+    for r in range(qn):
+        seen: set = set()
+        for c in range(pd.shape[1]):
+            i = int(pi[r, c])
+            if i == PAD_ID or not np.isfinite(pd[r, c]) or i in seen:
+                continue
+            seen.add(i)
+            if len(seen) == k:
+                break
+        hits[r] = len(seen & set(gt_ids[r, :k].tolist()))
+
+    # exact dedup'd visited counts, blocked over queries
+    per_cmp = np.zeros(qn, np.int64)
+    for s in range(0, qn, q_block):
+        e = min(qn, s + q_block)
+        union = np.zeros((e - s, n_base), bool)
+        for m, a in zip(masks, assigns):
+            union |= m[s:e][:, a]  # [qb, N]: probed(assignment of point)
+        per_cmp[s:e] = union.sum(-1)
+    per_np = sum(m.sum(-1) for m in masks) / len(masks)
+    return SearchResult(
+        recall=float((hits / k).mean()),
+        cmp_mean=float(per_cmp.mean()),
+        nprobe_mean=float(per_np.mean()),
+        per_query_cmp=per_cmp,
+        per_query_nprobe=per_np,
+        per_query_recall=hits / k,
+    )
+
+
+def lira_inputs(store: PartitionStore, queries: np.ndarray) -> np.ndarray:
+    """Query→centroid distances I, computed once per query batch."""
+    return np.asarray(centroid_distances(jnp.asarray(queries, jnp.float32), store.centroids))

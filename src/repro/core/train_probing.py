@@ -1,0 +1,114 @@
+"""Probing-model training loop (paper §3.2 + appendix A.5).
+
+Scalable recipe (appendix A.3): sample a subset D_sub, build partitions on it,
+compute exact kNN *within the subset* for labels, train f(q, I) with BCE.
+Works single-device; the distributed train_step for the dry-run lives in
+repro/launch (same loss, pjit-sharded).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import probing
+from repro.core.kmeans import centroid_distances
+from repro.train import optimizer as opt
+
+
+class TrainLog(NamedTuple):
+    losses: list
+    recalls: list        # probe-mask recall of kNN partitions (paper Fig 11)
+    nprobes: list        # mean predicted nprobe
+    hit_rates: list      # fraction of probed partitions that are kNN partitions
+    seconds: float
+
+
+def make_train_step(tx):
+    @jax.jit
+    def step(params, state, q, cd, labels):
+        loss, grads = jax.value_and_grad(probing.bce_loss)(params, q, cd, labels)
+        grads, gnorm = opt.clip_by_global_norm(grads, 1.0)
+        updates, state = tx.update(grads, state, params)
+        params = opt.apply_updates(params, updates)
+        return params, state, loss, gnorm
+    return step
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def _probe_quality(params, q, cd, labels, sigma=0.5):
+    mask, _ = probing.predict_probe_mask(params, q, cd, sigma)
+    maskf = mask.astype(jnp.float32)
+    tp = (maskf * labels).sum(-1)
+    covered = tp / jnp.maximum(labels.sum(-1), 1.0)        # recall of kNN partitions
+    hit = tp / jnp.maximum(maskf.sum(-1), 1.0)             # precision of probes
+    return covered.mean(), hit.mean(), maskf.sum(-1).mean()
+
+
+def train_probing_model(
+    rng: jax.Array,
+    x_train: np.ndarray,
+    labels: np.ndarray,
+    centroids: np.ndarray,
+    *,
+    epochs: int = 10,
+    batch: int = 512,
+    lr: float = 1e-3,
+    pos_weight: float = 1.0,
+    eval_every: int = 10,
+    cfg: probing.ProbingConfig | None = None,
+    log: bool = False,
+):
+    """Returns (params, TrainLog). labels: binary kNN-partition masks [N_sub, B]."""
+    n, d = x_train.shape
+    b = centroids.shape[0]
+    cfg = cfg or probing.ProbingConfig(dim=d, n_partitions=b)
+    rng, ki = jax.random.split(rng)
+    params = probing.init(ki, cfg)
+    steps_per_epoch = max(1, n // batch)
+    tx = opt.adamw(opt.cosine_schedule(lr, warmup=50, total=epochs * steps_per_epoch))
+    state = tx.init(params)
+
+    if pos_weight != 1.0:
+        loss_fn = functools.partial(probing.bce_loss, pos_weight=pos_weight)
+    else:
+        loss_fn = probing.bce_loss
+
+    @jax.jit
+    def step(params, state, q, cd, lab):
+        loss, grads = jax.value_and_grad(loss_fn)(params, q, cd, lab)
+        grads, _ = opt.clip_by_global_norm(grads, 1.0)
+        updates, state = tx.update(grads, state, params)
+        return opt.apply_updates(params, updates), state, loss
+
+    cd_all = np.asarray(centroid_distances(jnp.asarray(x_train), jnp.asarray(centroids)))
+    tlog = TrainLog([], [], [], [], 0.0)
+    t0 = time.time()
+    host_rng = np.random.default_rng(0)
+    it = 0
+    for ep in range(epochs):
+        perm = host_rng.permutation(n)
+        for s in range(0, steps_per_epoch * batch, batch):
+            sel = perm[s : s + batch]
+            params, state, loss = step(
+                params, state,
+                jnp.asarray(x_train[sel]), jnp.asarray(cd_all[sel]), jnp.asarray(labels[sel]),
+            )
+            if it % eval_every == 0:
+                sub = host_rng.choice(n, size=min(2048, n), replace=False)
+                cov, hit, npb = _probe_quality(
+                    params, jnp.asarray(x_train[sub]), jnp.asarray(cd_all[sub]), jnp.asarray(labels[sub])
+                )
+                tlog.losses.append(float(loss))
+                tlog.recalls.append(float(cov))
+                tlog.hit_rates.append(float(hit))
+                tlog.nprobes.append(float(npb))
+                if log:
+                    print(f"ep{ep} it{it} loss={float(loss):.3f} part-recall={float(cov):.3f} "
+                          f"hit={float(hit):.3f} nprobe={float(npb):.2f}")
+            it += 1
+    return params, tlog._replace(seconds=time.time() - t0)

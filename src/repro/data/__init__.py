@@ -1,0 +1,1 @@
+from repro.data.synthetic import make_vector_dataset, VectorDataset  # noqa: F401

@@ -1,0 +1,77 @@
+"""Realistic random batches for smoke tests — one generator per step kind."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LiraSystemConfig, LMConfig, RecsysConfig
+from repro.data.graph import build_graph_batch
+
+
+def make_smoke_inputs(config, shape, mesh, seed: int = 0):
+    """Returns kwargs dict for StepDef.fn's data arguments."""
+    host = np.random.default_rng(seed)
+    nshard = int(np.prod(list(mesh.shape.values())))
+
+    if isinstance(config, LMConfig):
+        gb, s = shape["global_batch"], shape["seq_len"]
+        if shape.kind == "train":
+            toks = host.integers(1, config.vocab, (gb, s + 1)).astype(np.int32)
+            return {"batch": {"tokens": jnp.asarray(toks[:, :-1]), "labels": jnp.asarray(toks[:, 1:])}}
+        if shape.kind == "prefill":
+            return {"tokens": jnp.asarray(host.integers(1, config.vocab, (gb, s)).astype(np.int32))}
+        if shape.kind == "decode":
+            cache = {
+                "k": jnp.asarray(host.normal(0, 1, (config.n_layers, gb, s, config.n_kv_heads, config.head_dim)).astype(np.float32), jnp.dtype(config.dtype)),
+                "v": jnp.asarray(host.normal(0, 1, (config.n_layers, gb, s, config.n_kv_heads, config.head_dim)).astype(np.float32), jnp.dtype(config.dtype)),
+            }
+            return {"cache": cache,
+                    "tokens": jnp.asarray(host.integers(1, config.vocab, (gb, 1)).astype(np.int32)),
+                    "pos": jnp.asarray(s // 2, jnp.int32)}
+
+    if isinstance(config, GNNConfig):
+        batch = build_graph_batch(
+            seed,
+            n_nodes=shape["n_nodes"], n_edges=shape["n_edges"],
+            d_feat=shape["d_feat"], triplet_mult=shape["triplet_mult"],
+            n_graphs=shape.dims.get("batch", 1), n_shards=nshard,
+        )
+        return {"batch": {k: jnp.asarray(v) for k, v in batch.items()}}
+
+    if isinstance(config, RecsysConfig):
+        b = shape["batch"] if shape.kind != "retrieval" else shape["n_candidates"]
+        batch = {
+            "sparse_ids": jnp.asarray(host.integers(0, config.vocab_per_field, (b, config.n_sparse, config.nnz)).astype(np.int32)),
+            "label": jnp.asarray((host.uniform(size=b) < 0.3).astype(np.float32)),
+        }
+        if config.n_dense:
+            batch["dense"] = jnp.asarray(host.lognormal(0, 1, (b, config.n_dense)).astype(np.float32))
+        if config.interaction == "multi-interest":
+            batch["hist_ids"] = jnp.asarray(host.integers(0, config.vocab_per_field, (b, config.hist_len)).astype(np.int32))
+            batch["hist_mask"] = jnp.asarray((host.uniform(size=(b, config.hist_len)) < 0.8).astype(np.float32))
+            batch["target_id"] = jnp.asarray(host.integers(0, config.vocab_per_field, b).astype(np.int32))
+        return {"batch": batch}
+
+    if isinstance(config, LiraSystemConfig):
+        if shape.kind == "lira_serve":
+            nq = shape["n_queries"]
+            vecs = host.normal(0, 1, (config.n_partitions, config.capacity, config.dim)).astype(np.float32)
+            ids = np.arange(config.n_partitions * config.capacity, dtype=np.int32).reshape(
+                config.n_partitions, config.capacity)
+            # mark some tail rows as padding
+            ids[:, -max(1, config.capacity // 8):] = -1
+            store = {
+                "centroids": jnp.asarray(vecs.mean(1)),
+                "vectors": jnp.asarray(vecs),
+                "ids": jnp.asarray(ids),
+            }
+            return {"store": store,
+                    "queries": jnp.asarray(host.normal(0, 1, (nq, config.dim)).astype(np.float32))}
+        if shape.kind == "lira_train":
+            b = shape["batch"]
+            return {"batch": {
+                "q": jnp.asarray(host.normal(0, 1, (b, config.dim)).astype(np.float32)),
+                "cent_dist": jnp.asarray(host.uniform(1, 10, (b, config.n_partitions)).astype(np.float32)),
+                "labels": jnp.asarray((host.uniform(size=(b, config.n_partitions)) < 0.1).astype(np.float32)),
+            }}
+    raise ValueError((type(config), shape.kind))

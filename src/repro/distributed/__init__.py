@@ -1,0 +1,1 @@
+from repro.distributed.sharding import LOGICAL_RULES, logical_to_pspec, batch_axes, seq_axis  # noqa: F401

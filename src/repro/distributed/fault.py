@@ -1,0 +1,118 @@
+"""Failure & straggler simulation harness (serving side).
+
+A 1000+-node serving deployment of LIRA is pod-replicated (DESIGN.md §5):
+each pod holds a full index replica; a front-end router spreads query batches.
+This module simulates that control plane so the policies are testable without
+hardware:
+
+  * ReplicaRouter — power-of-two-choices load balancing over healthy replicas,
+    heartbeat-based failure detection, automatic failover and re-queue of
+    in-flight batches from a dead replica;
+  * StragglerMitigator — hedged requests: if a replica exceeds the p95-based
+    hedge deadline, the batch is re-issued to the next-least-loaded replica
+    and the first response wins (classic tail-at-scale mitigation).
+
+Training-side fault tolerance (checkpoint/restart, deterministic data replay)
+lives in repro.train.trainer + repro.ckpt.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Replica:
+    rid: int
+    healthy: bool = True
+    inflight: int = 0
+    served: int = 0
+    latency_scale: float = 1.0     # >1 = straggler
+    ewma: float = 1.0              # latency EWMA (hedge target selection)
+
+
+class ReplicaRouter:
+    def __init__(self, n_replicas: int, seed: int = 0):
+        self.replicas = [Replica(i) for i in range(n_replicas)]
+        self.rng = np.random.default_rng(seed)
+        self.requeued = 0
+
+    def healthy(self):
+        return [r for r in self.replicas if r.healthy]
+
+    def pick(self) -> Replica:
+        """Power-of-two-choices on in-flight depth."""
+        h = self.healthy()
+        if not h:
+            raise RuntimeError("no healthy replicas")
+        if len(h) == 1:
+            return h[0]
+        a, b = self.rng.choice(len(h), 2, replace=False)
+        return h[a] if h[a].inflight <= h[b].inflight else h[b]
+
+    def mark_failed(self, rid: int) -> int:
+        """Heartbeat loss: fail the replica, re-queue its in-flight batches.
+        Returns number of batches to replay."""
+        r = self.replicas[rid]
+        r.healthy = False
+        lost = r.inflight
+        r.inflight = 0
+        self.requeued += lost
+        return lost
+
+    def recover(self, rid: int):
+        self.replicas[rid].healthy = True
+
+    def dispatch(self, n_batches: int, fail_at: Optional[tuple[int, int]] = None):
+        """Simulate dispatching batches; fail_at=(batch_idx, rid) kills that
+        replica WITH the batch in flight — the batch is re-queued and served
+        by a healthy replica. Returns per-replica served counts (every batch
+        is served exactly once)."""
+        from collections import deque
+
+        pending = deque(range(n_batches))
+        while pending:
+            i = pending.popleft()
+            if fail_at is not None and i == fail_at[0] and self.replicas[fail_at[1]].healthy:
+                victim = self.replicas[fail_at[1]]
+                victim.inflight += 1          # batch lands on the doomed node
+                self.mark_failed(victim.rid)  # heartbeat loss mid-serve
+                pending.appendleft(i)         # replay on a healthy replica
+                continue
+            r = self.pick()
+            r.served += 1
+        return {r.rid: r.served for r in self.replicas}
+
+
+class StragglerMitigator:
+    """Hedged requests: if the primary exceeds a robust deadline (3× median —
+    median is robust to a slow-node-polluted history), the batch is re-issued
+    to the healthy replica with the best latency EWMA and the first response
+    wins (tail-at-scale hedging)."""
+
+    def __init__(self, router: ReplicaRouter, hedge_factor: float = 3.0):
+        self.router = router
+        self.hedge_factor = hedge_factor
+        self.latencies: list[float] = []
+        self.hedges = 0
+
+    def serve(self, base_latency: float) -> float:
+        r = self.router.pick()
+        lat = base_latency * r.latency_scale
+        if len(self.latencies) >= 20:
+            deadline = self.hedge_factor * float(np.median(self.latencies))
+            if lat > deadline:
+                others = [x for x in self.router.healthy() if x.rid != r.rid]
+                if others:
+                    r2 = min(others, key=lambda x: x.ewma)
+                    lat2 = deadline + base_latency * r2.latency_scale
+                    lat = min(lat, lat2)
+                    r2.ewma = 0.9 * r2.ewma + 0.1 * (base_latency * r2.latency_scale)
+                    self.hedges += 1
+        r.ewma = 0.9 * r.ewma + 0.1 * (base_latency * r.latency_scale)
+        self.latencies.append(lat)
+        r.served += 1
+        return lat

@@ -1,0 +1,74 @@
+"""Logical-axis sharding rules (MaxText-style), resolved to mesh axes.
+
+The production mesh axes are ("pod", "data", "model") — see launch/mesh.py.
+Logical axis names annotate every parameter/activation dimension; the rules
+below map them to mesh axes. Single-pod meshes simply lack the "pod" axis;
+``logical_to_pspec`` drops missing axes automatically.
+
+Scheme (DESIGN.md §5):
+  * activations: batch -> ("pod","data"), sequence -> "model" (2D batch-seq
+    parallelism; uniform across train / prefill / decode)
+  * params: "fsdp" -> "data" (ZeRO-3 via GSPMD all-gather), wide dims
+    ("mlp", "heads_flat", "expert", "vocab", "rows") -> "model"
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+LOGICAL_RULES: dict[str, Optional[str | tuple]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "flat_batch": ("pod", "data", "model"),  # fully flattened (GNN edges, bulk scoring)
+    # params
+    "fsdp": "data",
+    "mlp": "model",
+    "heads_flat": "model",     # flattened H*Dh projection output dim
+    "expert": "model",
+    "vocab": "model",
+    "rows": "model",           # embedding-table / partition-store rows
+    "stack": None,             # scanned layer axis — never sharded
+    "embed": None,
+    "kv": None,
+    "head_dim": None,
+    "none": None,
+}
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], mesh: jax.sharding.Mesh) -> P:
+    """Map logical axis names to a PartitionSpec valid on `mesh` (axes missing
+    from the mesh are dropped; None stays unsharded)."""
+    mesh_axes = set(mesh.axis_names)
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        rule = LOGICAL_RULES.get(ax, None)
+        if rule is None:
+            out.append(None)
+        elif isinstance(rule, tuple):
+            present = tuple(r for r in rule if r in mesh_axes)
+            out.append(present if len(present) > 1 else (present[0] if present else None))
+        else:
+            out.append(rule if rule in mesh_axes else None)
+    return P(*out)
+
+
+def batch_axes(mesh: jax.sharding.Mesh):
+    """Mesh axes that shard the batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def seq_axis(mesh: jax.sharding.Mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def constraint(x, mesh, *axes):
+    """with_sharding_constraint via logical names."""
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, logical_to_pspec(axes, mesh))
+    )

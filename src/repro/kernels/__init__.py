@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the ANN scoring hot path.
+
+  l2_topk       — fused gather-score-topk partition scan (serving hot path)
+  pq_adc        — PQ LUT scan as one-hot MXU contraction (IVFPQ)
+  kmeans_assign — fused distance+argmin (index build at 50M+ points)
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), oracle in ref.py,
+jit'd public wrapper with padding + impl dispatch in ops.py.
+"""

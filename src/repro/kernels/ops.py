@@ -1,0 +1,79 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On this container (CPU) kernels run in interpret mode for validation; the
+jnp reference path (`impl="ref"`) is the fast CPU fallback used by benches.
+On a real TPU backend, `impl="pallas"` compiles the kernels natively.
+
+All wrappers pad inputs to tile multiples and strip padding from outputs, so
+callers never worry about alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import l2_topk as _l2
+from repro.kernels import pq_adc as _adc
+from repro.kernels import kmeans_assign as _km
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_rows(a: jax.Array, mult: int, fill):
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a
+    pad_block = jnp.full((pad, *a.shape[1:]), fill, a.dtype)
+    return jnp.concatenate([a, pad_block], axis=0)
+
+
+def l2_topk(q, cands, cand_ids, k: int, *, impl: str | None = None, tq: int = 256, tc: int = 256):
+    """Top-k nearest candidates per query. Handles arbitrary Q/C via padding."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return _ref.l2_topk_ref(q, cands, cand_ids, k)
+    interpret = impl == "interpret" or jax.default_backend() != "tpu"
+    qn = q.shape[0]
+    tq_eff = min(tq, max(8, qn))
+    qp = _pad_rows(q, tq_eff, 0.0)
+    cp = _pad_rows(cands, tc, 0.0)
+    ip = _pad_rows(cand_ids.astype(jnp.int32), tc, -1)
+    k_eff = min(k, cp.shape[0])
+    d, i = _l2.l2_topk(qp, cp, ip, k_eff, tq=tq_eff, tc=min(tc, cp.shape[0]), interpret=interpret)
+    return d[:qn, :k], i[:qn, :k]
+
+
+def pq_adc(lut, codes, *, impl: str | None = None, tq: int = 128, tn: int = 128):
+    """ADC distances [Q, N] from per-query LUTs and PQ codes."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return _ref.pq_adc_ref(lut, codes)
+    interpret = impl == "interpret" or jax.default_backend() != "tpu"
+    qn, n = lut.shape[0], codes.shape[0]
+    tq_eff = min(tq, max(8, qn))
+    lp = _pad_rows(lut, tq_eff, 0.0)
+    cp = _pad_rows(codes.astype(jnp.int32), tn, 0)
+    out = _adc.pq_adc(lp, cp, tq=tq_eff, tn=min(tn, cp.shape[0]), interpret=interpret)
+    return out[:qn, :n]
+
+
+def kmeans_assign(x, centroids, *, impl: str | None = None, tn: int = 512, tb: int = 128):
+    """(argmin centroid, min sq-dist) per point."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return _ref.kmeans_assign_ref(x, centroids)
+    interpret = impl == "interpret" or jax.default_backend() != "tpu"
+    n, b = x.shape[0], centroids.shape[0]
+    tn_eff = min(tn, max(8, n))
+    tb_eff = min(tb, b)
+    xp = _pad_rows(x, tn_eff, 0.0)
+    # pad centroids with far-away rows so they never win the argmin
+    cp = _pad_rows(centroids, tb_eff, 1e6)
+    a, d = _km.kmeans_assign(xp, cp, tn=tn_eff, tb=tb_eff, interpret=interpret)
+    return a[:n], d[:n]

@@ -1,0 +1,59 @@
+"""PQ asymmetric-distance (ADC) Pallas kernel.
+
+dist[q, n] = Σ_m LUT[q, m, codes[n, m]] — a gather-accumulate over the per-
+query lookup table. On TPU the gather over the ks lane axis is realized as a
+one-hot contraction on the MXU (ks ≤ 256 keeps the one-hot tile cheap and
+turns random access into a dense dot — the standard TPU adaptation of the
+Faiss LUT scan; see DESIGN.md §3).
+
+Tiling: grid = (Q_tiles, N_blocks); LUT tile [TQ, m·ks] stays in VMEM across
+the candidate scan, codes stream in as [TN, m] int32 blocks.
+VMEM per step ≈ TQ·m·ks + TN·m·ks (one-hot) + TQ·TN f32
+(TQ=128, TN=128, m=16, ks=256 → ~4.5 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pq_adc_kernel(lut_ref, codes_ref, out_ref, *, ks: int):
+    lut = lut_ref[...]        # [TQ, m, ks] f32
+    codes = codes_ref[...]    # [TN, m] int32
+    onehot = jax.nn.one_hot(codes, ks, dtype=lut.dtype)        # [TN, m, ks]
+    # dist[q, n] = Σ_m Σ_k lut[q,m,k]·onehot[n,m,k]  — a dense MXU contraction
+    out_ref[...] = jax.lax.dot_general(
+        lut.reshape(lut.shape[0], -1),
+        onehot.reshape(onehot.shape[0], -1),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tn", "interpret"))
+def pq_adc(
+    lut: jax.Array,    # [Q, m, ks] f32 per-query subspace distance tables
+    codes: jax.Array,  # [N, m] int32 PQ codes
+    *,
+    tq: int = 128,
+    tn: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    qn, m, ks = lut.shape
+    n = codes.shape[0]
+    assert qn % tq == 0 and n % tn == 0, (qn, tq, n, tn)
+    kernel = functools.partial(_pq_adc_kernel, ks=ks)
+    return pl.pallas_call(
+        kernel,
+        grid=(qn // tq, n // tn),
+        in_specs=[
+            pl.BlockSpec((tq, m, ks), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, n), jnp.float32),
+        interpret=interpret,
+    )(lut, codes.astype(jnp.int32))

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (per-kernel allclose tests sweep
+shapes/dtypes against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_topk_ref(q: jax.Array, cands: jax.Array, cand_ids: jax.Array, k: int):
+    """[Q,d] x [C,d] -> (top-k sq dists [Q,k], ids [Q,k]); cand_ids<0 = padding."""
+    q = q.astype(jnp.float32)
+    c = cands.astype(jnp.float32)
+    d2 = (
+        jnp.sum(q * q, -1, keepdims=True)
+        - 2.0 * q @ c.T
+        + jnp.sum(c * c, -1)[None, :]
+    )
+    d2 = jnp.where(cand_ids[None, :] < 0, jnp.inf, d2)
+    neg, pos = jax.lax.top_k(-d2, k)
+    return -neg, cand_ids[pos]
+
+
+def pq_adc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """dist[q, n] = sum_m lut[q, m, codes[n, m]]."""
+    codes_t = codes.astype(jnp.int32).T  # [m, N]
+
+    def per_query(lq):  # [m, ks]
+        return jnp.sum(jnp.take_along_axis(lq, codes_t, axis=1), axis=0)
+
+    return jax.vmap(per_query)(lut.astype(jnp.float32))
+
+
+def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
+    x = x.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    d2 = (
+        jnp.sum(x * x, -1, keepdims=True)
+        - 2.0 * x @ c.T
+        + jnp.sum(c * c, -1)[None, :]
+    )
+    return jnp.argmin(d2, -1).astype(jnp.int32), jnp.min(d2, -1)

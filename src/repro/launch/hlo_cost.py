@@ -1,0 +1,390 @@
+"""HLO-text cost model with while-loop trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts a while body ONCE (verified in this
+container), which under-reports every scanned model by ~n_layers×. This parser
+walks the optimized SPMD module text instead:
+
+  * FLOPs: every ``dot`` op — 2 · |result| · Π(contracting dims) — multiplied
+    by the product of enclosing while trip counts (read from
+    ``backend_config={"known_trip_count":...}``);
+  * HBM bytes: Σ over materializing ops of (result + operand bytes). Post-
+    fusion, each op ≈ one HBM round trip, so this is a faithful traffic model;
+  * collective bytes: result bytes of all-reduce / all-gather / reduce-scatter
+    / all-to-all / collective-permute (per-device, since the module is SPMD).
+
+Numbers are PER DEVICE. Also returns the top FLOP contributors with their JAX
+op names — this is the "profile" the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "while",
+    "after-all", "partition-id", "replica-id", "iota", "conditional", "call",
+    "custom-call", "rng-bit-generator", "get-dimension-size", "domain", "opt-barrier",
+    "reshape",
+    # while-carry copies: XLA:CPU materializes full copies of loop-carried
+    # buffers (e.g. the KV cache) that the TPU backend updates in place
+    "copy",
+}
+# ops that touch only their RESULT-sized region of memory (plus an equal-sized
+# read): counting full operands would charge a dynamic-slice of a 5 GB KV
+# cache 5 GB instead of the slice it actually reads.
+RESULT_SIZED_OPS = {"dynamic-slice", "slice", "gather", "broadcast", "pad", "reverse"}
+# in-place update: reads+writes the update region only
+UPDATE_SIZED_OPS = {"dynamic-update-slice", "scatter", "select-and-scatter"}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+    "all-reduce-start", "all-gather-start", "collective-permute-start",
+    "ragged-all-to-all",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    result_type: str
+    op: str
+    args: str
+    line: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    params: dict = field(default_factory=dict)   # param name -> type str
+    instrs: list = field(default_factory=list)
+
+
+def _parse_computations(text: str) -> dict:
+    comps: dict[str, _Computation] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and ("->" in line):
+            cur = _Computation(name=m.group(1))
+            # parameter declarations: "name: type, name: type"
+            for pdecl in re.findall(r"([\w\.\-]+):\s*([^,)]+(?:\([^)]*\))?)", m.group(2)):
+                cur.params[pdecl[0]] = pdecl[1]
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append(_Instr(im.group(1), im.group(2), im.group(3), im.group(4), line))
+    return comps
+
+
+def _dot_flops(instr: _Instr, shapes: dict) -> float:
+    # contracting dim sizes from the lhs operand shape
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    ops = _OPERAND_RE.findall(instr.args)
+    if not ops:
+        return 0.0
+    lhs_type = shapes.get(ops[0], "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if sm is None:
+        return 0.0
+    lhs_dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+    contract = 1
+    if mc and mc.group(1):
+        for c in mc.group(1).split(","):
+            ci = int(c)
+            if ci < len(lhs_dims):
+                contract *= lhs_dims[ci]
+    result_elems = 0
+    rm = _SHAPE_RE.search(instr.result_type)
+    if rm:
+        result_elems = 1
+        if rm.group(2):
+            for d in rm.group(2).split(","):
+                result_elems *= int(d)
+    return 2.0 * result_elems * contract
+
+
+_ALIAS_OPS = ("bitcast", "reshape", "copy", "convert", "transpose")
+
+
+def _dims_of(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    return m.group(2) if m else None
+
+
+def _min_dtype_bytes(type_a: str, type_b: str) -> int:
+    """Bytes of the cheaper-dtype view of the same dims (bf16 original vs its
+    f32 CPU-normalization shadow)."""
+    return min(_shape_bytes(type_a) or 1 << 62, _shape_bytes(type_b) or 1 << 62)
+
+
+def _instr_bytes(ins: _Instr, shapes: dict, comps: dict, aliases: dict) -> float:
+    """HBM traffic model for one (post-fusion) instruction.
+
+    Conventions (documented in EXPERIMENTS.md §Roofline):
+      * slice-like ops: read charged at the ORIGINAL dtype of the sliced buffer
+        (resolved through convert/bitcast chains — f32 shadows of bf16 buffers
+        are XLA:CPU artifacts); no write charge (fuses into the consumer on TPU);
+      * DUS (standalone or fused): read+write of the update region only;
+      * bf16<->f32 converts: 0 (fused on TPU / don't exist);
+      * fusion: params consumed only via slices inside charge slice bytes
+        (alias-chased); DUS targets are not reads.
+    """
+    rb = _shape_bytes(ins.result_type)
+
+    def resolved_bytes(name: str) -> int:
+        t = aliases.get(name, shapes.get(name, ""))
+        return _shape_bytes(t)
+
+    if ins.op in RESULT_SIZED_OPS:
+        # read-only charge, at the min of result vs source dtype width
+        ops_n = _OPERAND_RE.findall(ins.args)
+        if ops_n and ops_n[0] in shapes:
+            src_b = resolved_bytes(ops_n[0])
+            full_b = _shape_bytes(shapes[ops_n[0]])
+            scale = src_b / full_b if full_b else 1.0
+            return float(min(rb, rb * scale) if scale < 1.0 else rb)
+        return float(rb)
+    if ins.op in UPDATE_SIZED_OPS:
+        ops_n = _OPERAND_RE.findall(ins.args)
+        upd = _shape_bytes(shapes.get(ops_n[1], "")) if len(ops_n) > 1 else 0
+        return 2.0 * upd
+    if ins.op == "convert":
+        ops_n = _OPERAND_RE.findall(ins.args)
+        src = shapes.get(ops_n[0], "") if ops_n else ""
+        sm, rm = _SHAPE_RE.search(src), _SHAPE_RE.search(ins.result_type)
+        pair = {sm.group(1), rm.group(1)} if (sm and rm) else set()
+        return 0.0 if pair <= {"bf16", "f32"} else 2.0 * rb
+
+    if ins.op == "fusion":
+        tgts = _CALLS_RE.findall(ins.line)
+        inner = comps.get(tgts[0]) if tgts else None
+        if inner is not None:
+            ishapes = dict(inner.params)
+            ialias: dict = {}
+            dus_updates = 0.0
+            dus_targets: set = set()
+            for ii in inner.instrs:
+                ishapes[ii.name] = ii.result_type
+                ops_i = _OPERAND_RE.findall(ii.args)
+                if ii.op in _ALIAS_OPS and ops_i:
+                    base = ialias.get(ops_i[0], ops_i[0])
+                    if _dims_of(ishapes.get(ops_i[0], "")) == _dims_of(ii.result_type):
+                        ialias[ii.name] = base
+                if ii.op in UPDATE_SIZED_OPS and len(ops_i) > 1:
+                    dus_updates += _shape_bytes(ishapes.get(ops_i[1], ""))
+                    dus_targets.add(ialias.get(ops_i[0], ops_i[0]))
+            # write: in-place if the fusion result dims match a DUS target
+            root_dims = _dims_of(ins.result_type)
+            in_place = any(
+                _dims_of(ishapes.get(t, inner.params.get(t, ""))) == root_dims for t in dus_targets
+            )
+            wb = 2.0 * dus_updates if (in_place and dus_updates) else float(rb)
+            # reads per parameter (alias-chased; DUS targets excluded)
+            pnames = list(inner.params.keys())
+            onames = _OPERAND_RE.findall(ins.args)
+            total_r = 0.0
+            for pi, pname in enumerate(pnames):
+                outer = onames[pi] if pi < len(onames) else None
+                full = resolved_bytes(outer) if outer and outer in shapes else _shape_bytes(
+                    inner.params.get(pname, ""))
+                names = {pname} | {a for a, b in ialias.items() if b == pname}
+                if pname in dus_targets or (names & dus_targets):
+                    continue  # in-place target, not a read
+                sliced, nonslice = 0.0, False
+                for ii in inner.instrs:
+                    ops_i = set(_OPERAND_RE.findall(ii.args))
+                    if ops_i & names:
+                        if ii.op in ("dynamic-slice", "slice", "gather"):
+                            sliced += _shape_bytes(ii.result_type)
+                        elif ii.op not in _ALIAS_OPS and ii.op != "parameter":
+                            nonslice = True
+                total_r += full if (nonslice or sliced == 0.0) else min(full, sliced)
+            return wb + total_r
+        return 2.0 * rb
+
+    b = float(rb)
+    for opn in _OPERAND_RE.findall(ins.args):
+        if opn in shapes:
+            b += resolved_bytes(opn)
+    return b
+
+
+def analyze(text: str, top_n: int = 15) -> dict:
+    comps = _parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None:  # fallback: computation named main*
+        entry = next((n for n in comps if n.startswith("main")), next(iter(comps)))
+
+    # per-computation local costs + call edges
+    flops_c: dict[str, float] = {}
+    bytes_c: dict[str, float] = {}
+    coll_c: dict[str, dict] = {}
+    edges: dict[str, list] = defaultdict(list)   # comp -> [(child, mult)]
+    contribs: dict[str, list] = defaultdict(list)
+
+    for cname, comp in comps.items():
+        shapes = dict(comp.params)
+        aliases: dict = {}
+        fl = by = 0.0
+        coll = defaultdict(float)
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.result_type
+            ops_a = _OPERAND_RE.findall(ins.args)
+            if ins.op in _ALIAS_OPS and ops_a and ops_a[0] in shapes:
+                if _dims_of(shapes[ops_a[0]]) == _dims_of(ins.result_type):
+                    aliases[ins.name] = aliases.get(ops_a[0], shapes[ops_a[0]])
+            if ins.op == "dot":
+                f = _dot_flops(ins, shapes)
+                fl += f
+                meta = re.search(r'op_name="([^"]*)"', ins.line)
+                contribs[cname].append((f, meta.group(1) if meta else ins.name))
+            if ins.op in COLLECTIVES and not ins.op.endswith("-done"):
+                # charge at the ORIGINAL dtype: XLA:CPU hoists bf16->f32
+                # converts before gathers (FloatNormalization), doubling
+                # apparent bytes vs the TPU target where operands stay bf16
+                cb = _shape_bytes(ins.result_type)
+                ops_c = _OPERAND_RE.findall(ins.args)
+                if ops_c and ops_c[0] in aliases:
+                    om = _SHAPE_RE.search(aliases[ops_c[0]])
+                    rm = _SHAPE_RE.search(ins.result_type)
+                    if om and rm and om.group(1) != rm.group(1):
+                        scale = _DTYPE_BYTES.get(om.group(1), 4) / max(
+                            _DTYPE_BYTES.get(rm.group(1), 4), 1)
+                        if scale < 1.0:
+                            cb *= scale
+                coll[ins.op.replace("-start", "")] += cb
+            if ins.op not in SKIP_BYTES_OPS and not ins.op.endswith("-done"):
+                by += _instr_bytes(ins, shapes, comps, aliases)
+            # call edges: while/call propagate BOTH flops and bytes; fusion-like
+            # ops count bytes at the CALL SITE only (inner instrs are register-
+            # resident on TPU), so bytes do not flow into their computations
+            if ins.op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(ins.line)
+                if tm:
+                    trip = int(tm.group(1))
+                for tgt in _CALLS_RE.findall(ins.line):
+                    edges[cname].append((tgt, trip, True))
+            elif ins.op in ("call", "conditional"):
+                for tgt in _CALLS_RE.findall(ins.line):
+                    edges[cname].append((tgt, 1, True))
+            elif ins.op in ("fusion", "reduce", "map", "scatter", "sort", "reduce-window", "select-and-scatter", "custom-call"):
+                for tgt in _CALLS_RE.findall(ins.line):
+                    edges[cname].append((tgt, 1, False))
+        flops_c[cname] = fl
+        bytes_c[cname] = by
+        coll_c[cname] = dict(coll)
+
+    # accumulate multipliers via DFS from entry (DAG; cycles impossible in HLO)
+    mult: dict[str, float] = defaultdict(float)        # flops multiplier
+    mult_b: dict[str, float] = defaultdict(float)      # bytes multiplier
+
+    def visit(name, m, mb):
+        mult[name] += m
+        mult_b[name] += mb
+        for child, cm, bytes_flow in edges.get(name, ()):
+            if child in comps:
+                visit(child, m * cm, mb * cm if bytes_flow else 0.0)
+
+    visit(entry, 1.0, 1.0)
+
+    total_flops = sum(flops_c[c] * mult.get(c, 0.0) for c in comps)
+    total_bytes = sum(bytes_c[c] * mult_b.get(c, 0.0) for c in comps)
+    coll_total: dict[str, float] = defaultdict(float)
+    for c in comps:
+        for op, b in coll_c[c].items():
+            coll_total[op] += b * mult.get(c, 0.0)
+
+    # top contributors (weighted)
+    top = []
+    for c in comps:
+        for f, opname in contribs[c]:
+            top.append((f * mult.get(c, 0.0), opname))
+    top.sort(reverse=True)
+    agg = defaultdict(float)
+    for f, opname in top:
+        agg[opname] += f
+    top_named = sorted(agg.items(), key=lambda kv: -kv[1])[:top_n]
+
+    return {
+        "flops": total_flops,
+        "bytes": total_bytes,
+        "collective_bytes": float(sum(coll_total.values())),
+        "collectives": {k: float(v) for k, v in sorted(coll_total.items())},
+        "top_flops": [(n, f) for n, f in top_named],
+    }
+
+
+def f32_shadow_bytes(text: str, min_bytes: int = 1 << 26) -> dict:
+    """XLA:CPU float-normalization artifact inventory.
+
+    The CPU backend has no native bf16 compute, so FloatNormalization inserts
+    f32 CONVERT copies of bf16 buffers (verified: whole KV caches get f32
+    shadows hoisted out of the decode loop). These buffers DO NOT EXIST on the
+    TPU target (native bf16). We enumerate large f32 converts whose operand is
+    a bf16 tensor of identical dims so the dry-run can report a TPU-adjusted
+    temp estimate alongside the raw CPU measurement (EXPERIMENTS.md §Dry-run
+    documents the methodology)."""
+    comps = _parse_computations(text)
+    total = 0
+    count = 0
+    largest = []
+    for comp in comps.values():
+        shapes = dict(comp.params)
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.result_type
+            if ins.op != "convert":
+                continue
+            rm = _SHAPE_RE.search(ins.result_type)
+            if rm is None or rm.group(1) != "f32":
+                continue
+            ops = _OPERAND_RE.findall(ins.args)
+            if not ops or ops[0] not in shapes:
+                continue
+            om = _SHAPE_RE.search(shapes[ops[0]])
+            if om is None or om.group(1) != "bf16" or om.group(2) != rm.group(2):
+                continue
+            b = _shape_bytes(ins.result_type)
+            if b >= min_bytes:
+                total += b
+                count += 1
+                largest.append(b)
+    largest.sort(reverse=True)
+    return {"bytes_total": total, "count": count, "largest": largest[:8]}

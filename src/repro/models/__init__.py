@@ -1,0 +1,18 @@
+"""Model registry: config dataclass type -> bundle factory."""
+from __future__ import annotations
+
+
+def build_bundle(config, mesh):
+    from repro.configs.base import GNNConfig, LiraSystemConfig, LMConfig, RecsysConfig
+    from repro.models import dimenet, recsys, transformer
+    from repro.serving import engine
+
+    if isinstance(config, LMConfig):
+        return transformer.make_bundle(config, mesh)
+    if isinstance(config, GNNConfig):
+        return dimenet.make_bundle(config, mesh)
+    if isinstance(config, RecsysConfig):
+        return recsys.make_bundle(config, mesh)
+    if isinstance(config, LiraSystemConfig):
+        return engine.make_bundle(config, mesh)
+    raise TypeError(f"unknown config type {type(config)}")

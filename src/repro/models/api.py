@@ -1,0 +1,92 @@
+"""Uniform model API consumed by the launcher / dry-run / smoke tests.
+
+Every architecture module exposes ``make_bundle(config) -> ModelBundle``:
+
+  init(rng)            — real parameters (REDUCED configs only; smoke tests)
+  param_specs()        — ShapeDtypeStruct pytree (full configs; no allocation)
+  param_pspecs()       — PartitionSpec pytree (logical axes resolved via rules)
+  step(shape)          — StepDef for a ShapeSpec: fn + input specs/shardings
+
+Steps take and return explicit pytrees; training steps have signature
+``fn(state, batch) -> (state, metrics)`` where state = (params, opt_state),
+serving steps ``fn(params, *inputs) -> outputs``. Everything is jit-able and
+shardable with in_shardings/out_shardings derived from the pspecs here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One input-shape cell from the assignment."""
+
+    name: str                     # e.g. "train_4k"
+    kind: str                     # train | prefill | decode | graph_train | rec_train | rec_serve | retrieval
+    dims: Mapping[str, int]       # shape parameters (seq_len, global_batch, ...)
+
+    def __getitem__(self, k):
+        return self.dims[k]
+
+
+@dataclasses.dataclass
+class StepDef:
+    """A lowerable step: callable + input/output shapes and shardings."""
+
+    fn: Callable
+    input_specs: dict            # name -> ShapeDtypeStruct (data inputs only)
+    input_pspecs: dict           # name -> PartitionSpec
+    out_pspecs: Any              # pytree of PartitionSpec (or None = auto)
+    donate: Sequence[int] = ()
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    name: str
+    config: Any
+    init: Callable               # rng -> params
+    param_specs: Callable        # () -> pytree of ShapeDtypeStruct
+    param_pspecs: Callable       # () -> pytree of PartitionSpec
+    step: Callable               # (ShapeSpec, **opts) -> StepDef
+    # optimizer-state spec builders (for train steps); default = AdamW shapes
+    opt_specs: Optional[Callable] = None
+    opt_pspecs: Optional[Callable] = None
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def named_shardings(mesh, pspec_tree):
+    return jax.tree.map(
+        lambda spec: jax.sharding.NamedSharding(mesh, spec),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def adamw_state_specs(param_specs_tree):
+    """ShapeDtypeStructs of repro.train.optimizer.adamw state for given params."""
+    from repro.train.optimizer import OptState
+
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(f32, param_specs_tree),
+        nu=jax.tree.map(f32, param_specs_tree),
+    )
+
+
+def adamw_state_pspecs(param_pspecs_tree):
+    from repro.train.optimizer import OptState
+
+    return OptState(
+        step=P(),
+        mu=jax.tree.map(lambda p: p, param_pspecs_tree, is_leaf=lambda x: isinstance(x, P) or x is None),
+        nu=jax.tree.map(lambda p: p, param_pspecs_tree, is_leaf=lambda x: isinstance(x, P) or x is None),
+    )

@@ -1,0 +1,234 @@
+"""Transformer building blocks: RMSNorm, RoPE, flash attention (scan over KV
+blocks — no [S, S] materialization), GQA, dense/MoE FFN.
+
+Sharding contract (DESIGN.md §5): activations [B, S, D] carry
+P(batch=("pod","data"), seq="model") everywhere; weights use flat head layouts
+[D, H·Dh] so the "model" axis never has to divide the head count.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    x32 = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, Dh]; positions: [B, S] or [S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [.., S, Dh/2]
+    if ang.ndim == 2:  # [S, Dh/2] -> broadcast batch
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B, S, KV, Dh] -> [B, S, H, Dh] by group repetition."""
+    b, s, kv, dh = k.shape
+    rep = n_heads // kv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, rep, dh)).reshape(b, s, n_heads, dh)
+
+
+def flash_attention(
+    q: jax.Array,          # [B, Sq, H, Dh]
+    k: jax.Array,          # [B, Skv, KV, Dh]
+    v: jax.Array,          # [B, Skv, KV, Dh]
+    *,
+    causal: bool,
+    block: int = 1024,
+    q_offset: int = 0,     # global position of q[0] (chunked prefill)
+    score_dtype=jnp.float32,  # bf16 halves materialized score traffic (§Perf)
+) -> jax.Array:
+    """Online-softmax attention, lax.scan over KV blocks: the [Sq, Skv] score
+    matrix never exists in HBM; per-step tile is [B, H, Sq, block]."""
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    assert skv % block == 0, (skv, block)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    # GQA via grouped einsum — NEVER materialize K/V expanded to H heads
+    # (a broadcast [B, S, H, Dh] copy costs 13 GB at mistral-123b scale).
+    # K/V stay in storage dtype; f32 only via accumulation (an explicit
+    # astype(f32) gets hoisted by XLA into a full-KV f32 copy).
+    qg = q.astype(k.dtype).reshape(b, sq, kv, g, dh)
+
+    rows = q_offset + jnp.arange(sq)
+
+    def body(carry, blk):
+        acc, m, l = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, blk * block, block, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, blk * block, block, axis=1)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, ks,
+                       preferred_element_type=score_dtype) * scale
+        s = s.astype(jnp.float32)
+        if causal:
+            cols = blk * block + jnp.arange(block)
+            s = jnp.where(cols[None, None, None, None, :] <= rows[None, None, None, :, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(k.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (acc_new, m_new, l_new), None
+
+    # remat per block: backward recomputes scores instead of saving
+    # [B, KV, G, Sq, block] f32 residuals for every block step
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    acc0 = jnp.zeros((b, kv, g, sq, dh), jnp.float32)
+    m0 = jnp.full((b, kv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(skv // block))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]               # [B, KV, G, Sq, Dh]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def swiglu_mlp(x: jax.Array, wi: jax.Array, wg: jax.Array, wo: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, wi)
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * h, wo)
+
+
+# --------------------------------------------------------------------- MoE
+
+def moe_dispatch_local(x_all, router_w, e0: int, e_loc: int, top_k: int, capacity: int):
+    """Per-device sort-based token-choice dispatch for the LOCAL expert range.
+
+    x_all: [T, D] tokens (already gathered over the model axis).
+    Returns (buf [E_loc, C, D], gate_buf [E_loc, C], tok_buf [E_loc, C] with
+    T as the drop sentinel).
+    """
+    t, d = x_all.shape
+    logits = jnp.einsum("td,de->te", x_all, router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    g, eidx = jax.lax.top_k(probs, top_k)                       # [T, k]
+    g = g / jnp.maximum(g.sum(-1, keepdims=True), 1e-9)         # renormalize top-k
+
+    flat_e = eidx.reshape(-1)
+    flat_t = jnp.broadcast_to(jnp.arange(t)[:, None], eidx.shape).reshape(-1)
+    flat_g = g.reshape(-1)
+
+    local = (flat_e >= e0) & (flat_e < e0 + e_loc)
+    key = jnp.where(local, flat_e - e0, e_loc)                  # e_loc = trash bucket
+    order = jnp.argsort(key, stable=True)
+    skey = key[order]
+    start = jnp.searchsorted(skey, jnp.arange(e_loc + 1))
+    pos = jnp.arange(t * top_k) - start[jnp.clip(skey, 0, e_loc)]
+    keep = (skey < e_loc) & (pos < capacity)
+    # out-of-range rows are dropped by scatter mode="drop"
+    row = jnp.where(keep, skey, e_loc)
+    col = jnp.where(keep, pos, 0)
+    # Scatter token INDICES (not rows) first, gather once afterwards — avoids
+    # materializing a [T·k, D] intermediate (4.3 GB/device at qwen3 scale).
+    gate_buf = jnp.zeros((e_loc, capacity), jnp.float32).at[row, col].set(
+        flat_g[order], mode="drop")
+    tok_buf = jnp.full((e_loc, capacity), t, jnp.int32).at[row, col].set(
+        flat_t[order], mode="drop")
+    x_pad = jnp.concatenate([x_all, jnp.zeros((1, d), x_all.dtype)], axis=0)
+    buf = x_pad[tok_buf]                                        # [E_loc, C, D]
+    return buf, gate_buf, tok_buf
+
+
+def moe_expert_ffn(buf, wi, wg, wo):
+    """buf: [E, C, D]; wi/wg: [E, D, F]; wo: [E, F, D]."""
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo)
+
+
+def moe_combine_local(expert_out, gate_buf, tok_buf, n_tokens: int):
+    """Scatter-add weighted expert outputs back to the token axis."""
+    weighted = expert_out.astype(jnp.float32) * gate_buf[..., None]
+    out = jnp.zeros((n_tokens + 1, expert_out.shape[-1]), jnp.float32)
+    out = out.at[tok_buf.reshape(-1)].add(weighted.reshape(-1, weighted.shape[-1]), mode="drop")
+    return out[:n_tokens]
+
+
+def _sort_pack(key, n_buckets: int, capacity: int):
+    """Sort-based bucketing: key [N] in [0, n_buckets) (or >= n_buckets =
+    drop). Returns slot [n_buckets, capacity] of indices into the ORIGINAL
+    array, sentinel = N."""
+    n = key.shape[0]
+    key_c = jnp.where((key >= 0) & (key < n_buckets), key, n_buckets)
+    order = jnp.argsort(key_c, stable=True)
+    skey = key_c[order]
+    start = jnp.searchsorted(skey, jnp.arange(n_buckets + 1))
+    pos = jnp.arange(n) - start[jnp.clip(skey, 0, n_buckets)]
+    keep = (skey < n_buckets) & (pos < capacity)
+    row = jnp.where(keep, skey, n_buckets)
+    col = jnp.where(keep, pos, 0)
+    return jnp.full((n_buckets, capacity), n, jnp.int32).at[row, col].set(
+        order.astype(jnp.int32), mode="drop")
+
+
+def moe_a2a_local(x_flat, router_w, e0, e_loc, model_n: int, top_k: int,
+                  c_send: int, c_exp: int, wi, wg, wo, axis_name: str = "model"):
+    """True expert-parallel MoE: route LOCAL tokens, all_to_all only the routed
+    (token, expert-copy) pairs to their expert shard, compute, a2a back,
+    gate-combine at the source. Collective volume ≈ 2·T_loc·top_k·D/model_n
+    per direction vs the gather path's (model_n−1)/model_n·T_row·D all-gather
+    + reduce-scatter (§Perf H3 napkin: 63 MB vs 503 MB per layer·microbatch at
+    qwen3 scale). No psum needed — output stays seq-sharded."""
+    t, d = x_flat.shape
+    logits = jnp.einsum("td,de->te", x_flat, router_w).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    g, eidx = jax.lax.top_k(probs, top_k)                      # [T, k]
+    g = g / jnp.maximum(g.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)                                  # [T·k]
+    flat_t = jnp.broadcast_to(jnp.arange(t)[:, None], eidx.shape).reshape(-1)
+    flat_g = g.reshape(-1)
+    dest = flat_e // e_loc
+
+    slot = _sort_pack(dest, model_n, c_send)                   # [model_n, c_send] pair idx
+    pad = flat_e.shape[0]
+    e_pad = jnp.concatenate([flat_e, jnp.full((1,), -1, flat_e.dtype)])
+    t_pad = jnp.concatenate([flat_t, jnp.full((1,), t, flat_t.dtype)])
+    g_pad = jnp.concatenate([flat_g, jnp.zeros((1,), flat_g.dtype)])
+    x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x_flat.dtype)])
+
+    send_x = x_pad[jnp.minimum(t_pad[slot], t)]                # [model_n, c_send, d]
+    send_e = e_pad[jnp.minimum(slot, pad)]                     # [model_n, c_send]
+
+    recv_x = jax.lax.all_to_all(send_x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    recv_e = jax.lax.all_to_all(send_e, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+    rt = model_n * c_send
+    rx = recv_x.reshape(rt, d)
+    re = recv_e.reshape(rt) - e0                               # local expert offset, -neg = pad
+    slot2 = _sort_pack(re, e_loc, c_exp)                       # [e_loc, c_exp] recv idx
+    rx_pad = jnp.concatenate([rx, jnp.zeros((1, d), rx.dtype)])
+    buf = rx_pad[jnp.minimum(slot2, rt)]                       # [e_loc, c_exp, d]
+    eout = moe_expert_ffn(buf, wi, wg, wo)
+    back_flat = moe_combine_local(
+        eout, jnp.ones(slot2.shape, jnp.float32), jnp.minimum(slot2, rt), rt)
+    back = jax.lax.all_to_all(back_flat.reshape(model_n, c_send, d).astype(x_flat.dtype),
+                              axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+    # gate-combine at the source: slot layout is preserved round-trip
+    src_tok = t_pad[jnp.minimum(slot, pad)].reshape(-1)        # [model_n·c_send]
+    src_gate = g_pad[jnp.minimum(slot, pad)].reshape(-1)
+    out = jnp.zeros((t + 1, d), jnp.float32)
+    out = out.at[src_tok].add(back.reshape(-1, d).astype(jnp.float32) * src_gate[:, None],
+                              mode="drop")
+    return out[:t]

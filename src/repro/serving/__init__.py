@@ -1,0 +1,1 @@
+from repro.serving.engine import make_bundle, LiraEngine  # noqa: F401

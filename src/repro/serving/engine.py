@@ -1,0 +1,300 @@
+"""Distributed LIRA serving engine — the paper's system on a TPU pod.
+
+Key insight of the TPU mapping (DESIGN.md §3): the probing model's output is a
+query→partition ROUTING problem, identical in structure to MoE token dispatch.
+serve_step:
+
+  1. queries sharded over ("pod","data"); partition store sharded over "model"
+     (each chip owns B/16 partitions); probing model + centroids replicated;
+  2. per chip: probing probabilities → top-`nprobe_max` partitions, σ-masked
+     (query-adaptive nprobe, paper §3.4);
+  3. sort-based dispatch of queries into per-local-partition buckets of static
+     capacity `q_cap` (the MoE-dispatch trick applied to ANN — compute scales
+     with Q·nprobe·cap, NOT Q·N: partition pruning materializes as real FLOP
+     savings under static shapes);
+  4. per local partition: fused L2+top-k scan (repro.kernels.l2_topk on TPU;
+     jnp path under lax.map on CPU);
+  5. scatter back per query, local top-k, all-gather(k·shards) over "model",
+     final merge. Collective volume is O(Q·k), independent of N.
+
+Multi-pod: each pod holds a full index replica; the front-end routes query
+batches to pods (repro.distributed.fault simulates replica failover).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LiraSystemConfig, ShapeSpec
+from repro.core import probing
+from repro.models.api import ModelBundle, StepDef, adamw_state_pspecs, adamw_state_specs, sds
+from repro.train import optimizer as opt
+
+shard_map = jax.shard_map
+
+
+def probing_param_specs(cfg: LiraSystemConfig):
+    pc = probing.ProbingConfig(dim=cfg.dim, n_partitions=cfg.n_partitions,
+                               q_hidden=tuple(cfg.q_hidden), i_hidden=tuple(cfg.i_hidden),
+                               p_hidden=tuple(cfg.p_hidden))
+    return jax.eval_shape(lambda: probing.init(jax.random.PRNGKey(0), pc))
+
+
+def store_specs(cfg: LiraSystemConfig):
+    b, c, d = cfg.n_partitions, cfg.capacity, cfg.dim
+    return {
+        "centroids": sds((b, d)),
+        "vectors": sds((b, c, d), jnp.dtype(getattr(cfg, "store_dtype", "float32"))),
+        "ids": sds((b, c), jnp.int32),
+    }
+
+
+def store_pspecs(mesh):
+    return {
+        "centroids": P(None, None),
+        "vectors": P("model", None, None),
+        "ids": P("model", None),
+    }
+
+
+# ------------------------------------------------------------- serve step
+
+def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float = 0.5,
+                    use_kernel: bool = False, q_cap_factor: float | None = None):
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    model_n = mesh.shape.get("model", 1)
+    bprod = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+    q_row = n_queries // bprod
+    b_loc = cfg.n_partitions // model_n
+    q_cap_factor = q_cap_factor if q_cap_factor is not None else getattr(cfg, "q_cap_factor", 2.0)
+    q_cap = max(8, int(q_row * cfg.nprobe_max / cfg.n_partitions * q_cap_factor))
+    k = cfg.k
+
+    def f(q_loc, params, cents, vecs_loc, ids_loc):
+        # q_loc: [q_row, d]; vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
+        cd = (
+            jnp.sum(q_loc * q_loc, -1, keepdims=True)
+            - 2.0 * q_loc @ cents.T
+            + jnp.sum(cents * cents, -1)[None, :]
+        )
+        p = jax.nn.sigmoid(probing.apply(params, q_loc, cd))        # [q_row, B]
+        vals, pidx = jax.lax.top_k(p, cfg.nprobe_max)               # global partitions
+        probe_ok = vals > sigma
+        probe_ok = probe_ok.at[:, 0].set(True)                      # always ≥1 partition
+
+        # ---- dispatch (sort-based, local partition range only)
+        b0 = jax.lax.axis_index("model") * b_loc if model_n > 1 else 0
+        flat_p = pidx.reshape(-1) - b0
+        flat_ok = probe_ok.reshape(-1) & (flat_p >= 0) & (flat_p < b_loc)
+        flat_q = jnp.broadcast_to(jnp.arange(q_row)[:, None], pidx.shape).reshape(-1)
+        key = jnp.where(flat_ok, flat_p, b_loc)
+        order = jnp.argsort(key, stable=True)
+        skey = key[order]
+        start = jnp.searchsorted(skey, jnp.arange(b_loc + 1))
+        pos = jnp.arange(skey.shape[0]) - start[jnp.clip(skey, 0, b_loc)]
+        keep = (skey < b_loc) & (pos < q_cap)
+        row = jnp.where(keep, skey, b_loc)
+        col = jnp.where(keep, pos, 0)
+        qbuf = jnp.full((b_loc, q_cap), q_row, jnp.int32).at[row, col].set(
+            flat_q[order], mode="drop")                              # q_row = invalid
+
+        # ---- per-partition fused scan (l2 + top-k)
+        q_pad = jnp.concatenate([q_loc, jnp.full((1, q_loc.shape[1]), 1e9, q_loc.dtype)], 0)
+
+        def scan_partition(args):
+            qi, vec_b, id_b = args                                   # [q_cap], [cap, d], [cap]
+            qs = q_pad[qi].astype(vec_b.dtype)                       # [q_cap, d]
+            # bf16 operands + f32 accumulation (store_dtype=bfloat16 halves
+            # the dominant vector-read traffic; exact rerank happens at f32)
+            d2 = (
+                jnp.sum(qs.astype(jnp.float32) ** 2, -1, keepdims=True)
+                - 2.0 * jax.lax.dot_general(qs, vec_b, (((1,), (1,)), ((), ())),
+                                            preferred_element_type=jnp.float32)
+                + jnp.sum(vec_b.astype(jnp.float32) ** 2, -1)[None, :]
+            )
+            d2 = jnp.where(id_b[None, :] < 0, jnp.inf, d2)
+            neg, posk = jax.lax.top_k(-d2, k)
+            return -neg, id_b[posk]                                  # [q_cap, k] ×2
+
+        dists, rids = jax.lax.map(scan_partition, (qbuf, vecs_loc, ids_loc))  # [b_loc, q_cap, k]
+
+        # ---- scatter back per query, local merge
+        out_d = jnp.full((q_row + 1, b_loc, k), jnp.inf, jnp.float32)
+        out_i = jnp.full((q_row + 1, b_loc, k), -1, jnp.int32)
+        cols = jnp.broadcast_to(jnp.arange(b_loc)[:, None], qbuf.shape)
+        out_d = out_d.at[qbuf, cols].set(dists, mode="drop")
+        out_i = out_i.at[qbuf, cols].set(rids, mode="drop")
+        neg, posk = jax.lax.top_k(-out_d[:q_row].reshape(q_row, -1), k)
+        loc_d = -neg
+        loc_i = jnp.take_along_axis(out_i[:q_row].reshape(q_row, -1), posk, -1)
+
+        # ---- cross-shard merge (O(Q·k·shards) bytes — independent of N)
+        if model_n > 1:
+            all_d = jax.lax.all_gather(loc_d, "model", axis=1, tiled=True)   # [q_row, 16k]
+            all_i = jax.lax.all_gather(loc_i, "model", axis=1, tiled=True)
+            neg, posk = jax.lax.top_k(-all_d, k)
+            loc_d = -neg
+            loc_i = jnp.take_along_axis(all_i, posk, -1)
+        nprobe_eff = probe_ok.sum(-1).astype(jnp.float32)
+        return loc_d, loc_i, nprobe_eff
+
+    param_spec = jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg))
+
+    def serve_step(params, store, queries):
+        return shard_map(
+            f, mesh=mesh,
+            in_specs=(P(bspec, None), param_spec, P(None, None),
+                      P("model", None, None), P("model", None)),
+            out_specs=(P(bspec, None), P(bspec, None), P(bspec)),
+            check_vma=False,
+        )(queries, params, store["centroids"], store["vectors"], store["ids"])
+
+    return serve_step
+
+
+@functools.lru_cache(maxsize=None)
+def _probing_specs_cached(dim, b, qh, ih, ph):
+    pc = probing.ProbingConfig(dim=dim, n_partitions=b, q_hidden=qh, i_hidden=ih, p_hidden=ph)
+    return jax.eval_shape(lambda: probing.init(jax.random.PRNGKey(0), pc))
+
+
+def probing_param_specs_cache(cfg: LiraSystemConfig):
+    return _probing_specs_cached(cfg.dim, cfg.n_partitions, tuple(cfg.q_hidden),
+                                 tuple(cfg.i_hidden), tuple(cfg.p_hidden))
+
+
+# ------------------------------------------------------------- train step
+
+def make_probe_train_step(cfg: LiraSystemConfig, mesh, tx):
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def train_step(state, batch):
+        params, opt_state = state
+
+        def loss_fn(p):
+            return probing.bce_loss(p, batch["q"], batch["cent_dist"], batch["labels"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads, gnorm = opt.clip_by_global_norm(grads, 1.0)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = opt.apply_updates(params, updates)
+        return (params, opt_state), {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+# ------------------------------------------------------------- bundle
+
+def make_bundle(cfg: LiraSystemConfig, mesh) -> ModelBundle:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    tx = opt.adamw(opt.cosine_schedule(1e-3, 50, 5000))
+    pc = probing.ProbingConfig(dim=cfg.dim, n_partitions=cfg.n_partitions,
+                               q_hidden=tuple(cfg.q_hidden), i_hidden=tuple(cfg.i_hidden),
+                               p_hidden=tuple(cfg.p_hidden))
+
+    def step(shape: ShapeSpec) -> StepDef:
+        if shape.kind == "lira_serve":
+            nq = shape["n_queries"]
+            fn_inner = make_serve_step(cfg, mesh, nq)
+
+            def fn(params, store, queries):
+                return fn_inner(params, store, queries)
+
+            return StepDef(
+                fn=fn,
+                input_specs={"store": store_specs(cfg), "queries": sds((nq, cfg.dim))},
+                input_pspecs={"store": store_pspecs(mesh), "queries": P(bspec, None)},
+                out_pspecs=None,
+            )
+        if shape.kind == "lira_train":
+            b = shape["batch"]
+            return StepDef(
+                fn=make_probe_train_step(cfg, mesh, tx),
+                input_specs={
+                    "q": sds((b, cfg.dim)),
+                    "cent_dist": sds((b, cfg.n_partitions)),
+                    "labels": sds((b, cfg.n_partitions)),
+                },
+                input_pspecs={"q": P(bspec, None), "cent_dist": P(bspec, None),
+                              "labels": P(bspec, None)},
+                out_pspecs=None,
+            )
+        raise ValueError(shape.kind)
+
+    return ModelBundle(
+        name=cfg.arch,
+        config=cfg,
+        init=lambda rng, shape=None: probing.init(rng, pc),
+        param_specs=lambda shape=None: probing_param_specs_cache(cfg),
+        param_pspecs=lambda shape=None: jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg)),
+        step=step,
+        opt_specs=lambda shape=None: adamw_state_specs(probing_param_specs_cache(cfg)),
+        opt_pspecs=lambda shape=None: adamw_state_pspecs(
+            jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg))),
+    )
+
+
+# ------------------------------------------------------------- host engine
+
+@dataclasses.dataclass
+class LiraEngine:
+    """End-to-end host-driven engine: build (k-means → train probe → redundancy
+    → store) then serve batches via the distributed serve_step."""
+
+    cfg: LiraSystemConfig
+    params: dict
+    store: dict
+    mesh: jax.sharding.Mesh
+    sigma: float = 0.5
+
+    @classmethod
+    def build(cls, mesh, x: np.ndarray, *, n_partitions: int, k: int = 100,
+              eta: float = 0.03, train_frac: float = 0.5, epochs: int = 8,
+              nprobe_max: Optional[int] = None, seed: int = 0, log: bool = False):
+        from repro.core import build_store, ground_truth as gt, kmeans_fit
+        from repro.core.redundancy import plan_redundancy, replica_rows
+        from repro.core.train_probing import train_probing_model
+
+        rng = jax.random.PRNGKey(seed)
+        host = np.random.default_rng(seed)
+        st = kmeans_fit(rng, jnp.asarray(x), n_clusters=n_partitions, n_iters=20)
+        assign, cents = np.asarray(st.assign), np.asarray(st.centroids)
+
+        sub = host.choice(len(x), int(len(x) * train_frac), replace=False)
+        xs = x[sub]
+        _, sti = gt.exact_knn(xs, xs, k, exclude_self=True)
+        part_of = assign[sub]
+        lab = np.zeros((len(sub), n_partitions), np.float32)
+        rows = np.repeat(np.arange(len(sub)), sti.shape[1])
+        np.add.at(lab, (rows, part_of[sti].reshape(-1)), 1.0)
+        lab = (lab > 0).astype(np.float32)
+        params, _ = train_probing_model(rng, xs, lab, cents, epochs=epochs, log=log)
+
+        ids = np.arange(len(x), dtype=np.int32)
+        plan = plan_redundancy(params, x, assign, cents, eta=eta)
+        extra = replica_rows(plan, x, ids)
+        store_h = build_store(x, ids, assign, cents, extra=extra)
+        cfg = LiraSystemConfig(
+            arch="lira", dim=x.shape[1], n_partitions=n_partitions,
+            capacity=store_h.capacity, k=k,
+            nprobe_max=nprobe_max or max(8, n_partitions // 8),
+        )
+        store = {"centroids": store_h.centroids, "vectors": store_h.vectors,
+                 "ids": store_h.ids}
+        return cls(cfg=cfg, params=params, store=store, mesh=mesh)
+
+    def search(self, queries: np.ndarray, sigma: Optional[float] = None):
+        nq = queries.shape[0]
+        fn = make_serve_step(self.cfg, self.mesh, nq, sigma=sigma or self.sigma)
+        with self.mesh:
+            d, i, npb = jax.jit(fn)(self.params, self.store, jnp.asarray(queries, jnp.float32))
+        return np.asarray(d), np.asarray(i), np.asarray(npb)

@@ -1,0 +1,116 @@
+"""Pure-JAX optimizer substrate (no optax in this container).
+
+optax-like API: ``tx = adamw(...); state = tx.init(params);
+updates, state = tx.update(grads, state, params); params = apply_updates(...)``.
+
+AdamW keeps moments in f32 regardless of param dtype (mixed-precision safe);
+the returned update is cast back to the param dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+class Transform(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+        cos = final_frac * base_lr + (1 - final_frac) * base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw(
+    lr: float | Callable = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mask: Optional[Callable] = None,  # param pytree -> bool pytree (True = decay)
+) -> Transform:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        f32 = functools.partial(jnp.zeros_like, dtype=jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=jax.tree.map(f32, params), nu=jax.tree.map(f32, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** stepf
+        bc2 = 1 - b2 ** stepf
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p, decay):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m, v
+
+        decay_tree = (
+            mask(params) if mask is not None else jax.tree.map(lambda p: p.ndim >= 2, params)
+        )
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, params, decay_tree)
+        updates = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Transform(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0) -> Transform:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(functools.partial(jnp.zeros_like, dtype=jnp.float32), params),
+            nu={},
+        )
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (-lr_t * m).astype(p.dtype), m
+
+        flat = jax.tree.map(upd, grads, state.mu, params)
+        updates = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return updates, OptState(step=step, mu=mu, nu={})
+
+    return Transform(init=init, update=update)

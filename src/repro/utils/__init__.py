@@ -1,0 +1,1 @@
+from repro.utils.tree import tree_bytes, tree_count, tree_zeros_like, global_norm  # noqa: F401

@@ -1,0 +1,34 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.data import make_vector_dataset
+
+    return make_vector_dataset(n=6000, n_queries=100, dim=32, n_modes=24, seed=3)
+
+
+@pytest.fixture(scope="session")
+def small_index(small_dataset):
+    """(store, assign, centroids, gt_ids, k) shared across core tests."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_store, kmeans_fit
+    from repro.core import ground_truth as gt
+
+    ds = small_dataset
+    k, b = 10, 16
+    st = kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(ds.base), n_clusters=b, n_iters=12)
+    assign = np.asarray(st.assign)
+    cents = np.asarray(st.centroids)
+    ids = np.arange(len(ds.base), dtype=np.int32)
+    store = build_store(ds.base, ids, assign, cents)
+    _, gti = gt.exact_knn(ds.queries, ds.base, k)
+    return store, assign, cents, gti, k

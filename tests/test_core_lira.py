@@ -1,0 +1,179 @@
+"""System-behaviour tests for the LIRA core: k-means, store, probing model,
+redundancy, retrieval, baselines — the paper's pipeline end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, build_store, centroid_distances, kmeans_fit, probing, store_stats
+from repro.core import ground_truth as gt
+from repro.core import retrieval as ret
+from repro.core.partitions import PAD_ID
+from repro.core.redundancy import plan_redundancy, replica_rows
+from repro.core.train_probing import train_probing_model
+
+
+def test_kmeans_converges(small_dataset):
+    ds = small_dataset
+    st5 = kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(ds.base), n_clusters=16, n_iters=5)
+    st20 = kmeans_fit(jax.random.PRNGKey(0), jnp.asarray(ds.base), n_clusters=16, n_iters=20)
+    assert float(st20.inertia) <= float(st5.inertia) * 1.001
+    assert np.asarray(st20.assign).min() >= 0 and np.asarray(st20.assign).max() < 16
+
+
+def test_store_roundtrip(small_index, small_dataset):
+    store, assign, cents, gti, k = small_index
+    ds = small_dataset
+    stats = store_stats(store)
+    assert stats["total"] == len(ds.base)
+    # every non-pad row holds the original vector
+    ids = np.asarray(store.ids)
+    vecs = np.asarray(store.vectors)
+    for b in [0, 5, 11]:
+        for c in range(min(4, int(np.asarray(store.counts)[b]))):
+            i = ids[b, c]
+            assert i != PAD_ID
+            np.testing.assert_array_equal(vecs[b, c], ds.base[i])
+            assert assign[i] == b
+
+
+def test_knn_count_distribution_sums_to_k(small_index):
+    store, assign, cents, gti, k = small_index
+    ncd = gt.knn_count_distribution(gti, assign, store.n_partitions)
+    assert (ncd.sum(-1) == k).all()
+    labels = gt.knn_partition_labels(gti, assign, store.n_partitions)
+    assert ((labels == 0) | (labels == 1)).all()
+    assert (gt.optimal_nprobe(labels) >= 1).all()
+
+
+def test_nprobe_dist_upper_bounds_nprobe_star(small_index, small_dataset):
+    """The paper's Limit 1: nprobe*_dist >= nprobe* always."""
+    store, assign, cents, gti, k = small_index
+    labels = gt.knn_partition_labels(gti, assign, store.n_partitions)
+    nstar = gt.optimal_nprobe(labels)
+    ndist = gt.nprobe_dist(gti, assign, small_dataset.queries, cents)
+    assert (ndist >= nstar).all()
+
+
+def test_ivf_full_probe_is_exact(small_index, small_dataset):
+    """Probing ALL partitions must reach recall 1.0 (evaluation-engine check)."""
+    store, assign, cents, gti, k = small_index
+    ptk = ret.partition_topk(store, small_dataset.queries, k)
+    mask = np.ones((len(small_dataset.queries), store.n_partitions), bool)
+    res = ret.evaluate_probe(ptk, mask, gti, k)
+    assert res.recall == pytest.approx(1.0)
+    assert res.cmp_mean == pytest.approx(len(small_dataset.base))
+
+
+def test_ivf_recall_monotone_in_nprobe(small_index, small_dataset):
+    store, assign, cents, gti, k = small_index
+    ptk = ret.partition_topk(store, small_dataset.queries, k)
+    cd = ret.lira_inputs(store, small_dataset.queries)
+    recalls = [ret.evaluate_probe(ptk, ret.probe_ivf(cd, n), gti, k).recall for n in (1, 2, 4, 8, 16)]
+    assert all(b >= a - 1e-9 for a, b in zip(recalls, recalls[1:]))
+    assert recalls[-1] == pytest.approx(1.0)
+
+
+@pytest.fixture(scope="module")
+def trained_probing(small_index, small_dataset):
+    store, assign, cents, gti, k = small_index
+    ds = small_dataset
+    sub = np.random.default_rng(1).choice(len(ds.base), 4000, replace=False)
+    xs = ds.base[sub]
+    _, sti = gt.exact_knn(xs, xs, k, exclude_self=True)
+    part_of = assign[sub]
+    lab = np.stack([np.bincount(part_of[row], minlength=store.n_partitions) for row in sti])
+    lab = (lab > 0).astype(np.float32)
+    params, tlog = train_probing_model(jax.random.PRNGKey(2), xs, lab, cents, epochs=5, batch=256, lr=2e-3)
+    return params, tlog
+
+
+def test_probing_model_converges(trained_probing):
+    """Paper Fig 11: loss decreases, partition-recall converges high. (The
+    paper's own post-training hit rate is ~0.8 — σ tuning closes the rest.)"""
+    params, tlog = trained_probing
+    assert tlog.losses[-1] < tlog.losses[0] * 0.5
+    assert tlog.recalls[-1] > 0.8
+
+
+def test_lira_beats_ivf_tradeoff(small_index, small_dataset, trained_probing):
+    """Core paper claim: at comparable recall, LIRA probes fewer points."""
+    store, assign, cents, gti, k = small_index
+    params, _ = trained_probing
+    ds = small_dataset
+    ptk = ret.partition_topk(store, ds.queries, k)
+    cd = ret.lira_inputs(store, ds.queries)
+    p_hat = np.asarray(probing.probs(params, jnp.asarray(ds.queries), jnp.asarray(cd)))
+
+    lira = ret.evaluate_probe(ptk, ret.probe_lira(p_hat, 0.1), gti, k)
+    # IVF needing >= lira recall
+    for n in range(1, store.n_partitions + 1):
+        ivf = ret.evaluate_probe(ptk, ret.probe_ivf(cd, n), gti, k)
+        if ivf.recall >= lira.recall - 1e-9:
+            break
+    assert lira.recall > 0.9
+    assert lira.cmp_mean < ivf.cmp_mean
+
+
+def test_redundancy_reduces_nprobe(small_index, small_dataset, trained_probing):
+    """Insight 2: duplicating long-tail points lowers cost at matched recall."""
+    store, assign, cents, gti, k = small_index
+    params, _ = trained_probing
+    ds = small_dataset
+    ids = np.arange(len(ds.base), dtype=np.int32)
+    plan = plan_redundancy(params, ds.base, assign, cents, eta=0.15)
+    extra = replica_rows(plan, ds.base, ids)
+    assert len(extra[1]) == int(round(0.15 * len(ds.base)))
+    # replica target differs from home partition
+    assert (extra[2] != assign[plan.picked]).all()
+    store_r = build_store(ds.base, ids, assign, cents, extra=extra)
+    assert store_stats(store_r)["total"] == len(ds.base) + len(extra[1])
+
+
+def test_ivf_fuzzy_duplicates_everything(small_dataset):
+    ds = small_dataset
+    store = baselines.build_ivf_fuzzy(jax.random.PRNGKey(0), ds.base, 16)
+    assert store_stats(store)["total"] == 2 * len(ds.base)
+
+
+def test_ivfpq_reconstruction_recall(small_dataset):
+    """IVFPQ ranks by ADC == reconstruction-L2; recall well below flat (the
+    paper's 'IVFPQ can hardly achieve the desired recall') but far above the
+    k/N random floor, at full probe."""
+    ds = small_dataset
+    k = 10
+    _, gti = gt.exact_knn(ds.queries, ds.base, k)
+    idx = baselines.build_ivfpq(jax.random.PRNGKey(0), ds.base, 16, m=8, ks=64)
+    ptk = ret.partition_topk(idx.store, ds.queries, k)
+    mask = np.ones((len(ds.queries), 16), bool)
+    res = ret.evaluate_probe(ptk, mask, gti, k)
+    assert 0.2 < res.recall < 1.0
+
+
+def test_adc_equals_reconstruction_distance(small_dataset):
+    """The pq.py fact: LUT ADC == L2 to decoded vectors (non-residual PQ)."""
+    from repro.core import pq as pqmod
+
+    ds = small_dataset
+    pq = pqmod.train_pq(jax.random.PRNGKey(1), ds.base[:2000], m=8, ks=32, n_iters=6)
+    codes = pqmod.encode(pq, ds.base[:256])
+    recon = pqmod.decode(pq, codes)
+    q = jnp.asarray(ds.queries[:16])
+    adc = np.asarray(pqmod.adc_distances(pq, q, jnp.asarray(codes)))
+    exact = ((ds.queries[:16, None] - recon[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(adc, exact, rtol=2e-4, atol=2e-4)
+
+
+def test_bliss_groups_route(small_dataset):
+    ds = small_dataset
+    k = 10
+    _, gti = gt.exact_knn(ds.queries, ds.base, k)
+    _, knn_ids = gt.exact_knn(ds.base[:3000], ds.base[:3000], 5, exclude_self=True)
+    groups = baselines.build_bliss(jax.random.PRNGKey(3), ds.base[:3000], 8, n_groups=2,
+                                   knn_ids=knn_ids, reparts=1, epochs=2)
+    _, gti3 = gt.exact_knn(ds.queries, ds.base[:3000], k)
+    ptks = [ret.partition_topk(g.store, ds.queries, k) for g in groups]
+    masks = [ret.probe_topn(baselines.bliss_scores(g, ds.queries), 3) for g in groups]
+    res = ret.merge_groups(ptks, masks, gti3, k, [g.assign for g in groups], 3000)
+    assert res.recall > 0.3  # routing is learned, not random
+    assert res.cmp_mean <= 3000

@@ -1,0 +1,79 @@
+"""Unit tests for the trip-count-aware HLO cost parser (the roofline's
+foundation): while multipliers, dot flops, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def _compile(fn, *specs, in_shardings=None):
+    jfn = jax.jit(fn) if in_shardings is None else jax.jit(fn, in_shardings=in_shardings)
+    return jfn.lower(*specs).compile()
+
+
+def test_while_trip_count_multiplies_flops():
+    """A scanned matmul must count L× the single-layer flops (XLA's own
+    cost_analysis counts it once — the bug this parser exists to fix)."""
+    L, D, B = 6, 64, 8
+
+    def step(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    c = _compile(step, jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+                 jax.ShapeDtypeStruct((B, D), jnp.float32))
+    res = hlo_cost.analyze(c.as_text())
+    expect = L * 2 * B * D * D
+    assert res["flops"] == pytest.approx(expect, rel=0.05), (res["flops"], expect)
+    xla = c.cost_analysis()["flops"]
+    assert xla < expect / 2  # demonstrates the XLA undercount
+
+
+def test_unrolled_matches_scanned():
+    D, B, L = 32, 4, 5
+
+    def scanned(w, x):
+        h, _ = jax.lax.scan(lambda h, wl: (h @ wl, None), x, w)
+        return h.sum()
+
+    def unrolled(w, x):
+        h = x
+        for i in range(L):
+            h = h @ w[i]
+        return h.sum()
+
+    specs = (jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+             jax.ShapeDtypeStruct((B, D), jnp.float32))
+    f_scan = hlo_cost.analyze(_compile(scanned, *specs).as_text())["flops"]
+    f_unroll = hlo_cost.analyze(_compile(unrolled, *specs).as_text())["flops"]
+    assert f_scan == pytest.approx(f_unroll, rel=0.05)
+
+
+def test_collective_bytes_counted():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def f(x):
+        return jax.shard_map(lambda a: jax.lax.psum(a, "model"), mesh=mesh,
+                             in_specs=jax.sharding.PartitionSpec(None, None),
+                             out_specs=jax.sharding.PartitionSpec(None, None),
+                             check_vma=False)(x)
+
+    with mesh:
+        c = _compile(f, jax.ShapeDtypeStruct((16, 16), jnp.float32))
+    res = hlo_cost.analyze(c.as_text())
+    # single-device mesh: psum may be elided; just assert the parser runs and
+    # returns the documented keys
+    for k in ("flops", "bytes", "collective_bytes", "collectives", "top_flops"):
+        assert k in res
+
+
+def test_shape_bytes_parsing():
+    assert hlo_cost._shape_bytes("f32[4,8]{1,0}") == 128
+    assert hlo_cost._shape_bytes("bf16[10]{0}") == 20
+    assert hlo_cost._shape_bytes("(f32[2]{0}, s32[3]{0})") == 20
+    assert hlo_cost._shape_bytes("pred[]") == 1

@@ -1,0 +1,87 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs jnp oracle across
+shapes and dtypes, plus property-based invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("qn,cn,d,k", [(8, 64, 16, 5), (37, 300, 48, 10), (64, 512, 128, 100), (1, 128, 96, 8)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_l2_topk_matches_ref(qn, cn, d, k, dtype):
+    rng = np.random.default_rng(qn * cn)
+    q = jnp.asarray(rng.normal(size=(qn, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(cn, d)), dtype)
+    ids = jnp.asarray(np.arange(cn, dtype=np.int32)).at[cn - cn // 8 :].set(-1)
+    d1, i1 = ops.l2_topk(q, c, ids, k, impl="interpret", tq=8, tc=64)
+    d2, i2 = ref.l2_topk_ref(q, c, ids, k)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=tol, atol=tol)
+    # id sets must match allowing ties (discrete_boundary check)
+    for r in range(qn):
+        assert set(np.asarray(i1)[r].tolist()) == set(np.asarray(i2)[r].tolist())
+
+
+@pytest.mark.parametrize("qn,n,m,ks", [(8, 64, 8, 16), (16, 256, 16, 256), (3, 130, 4, 32)])
+def test_pq_adc_matches_ref(qn, n, m, ks):
+    rng = np.random.default_rng(qn * n)
+    lut = jnp.asarray(rng.normal(size=(qn, m, ks)).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, ks, size=(n, m)).astype(np.int32))
+    a1 = ops.pq_adc(lut, codes, impl="interpret", tq=8, tn=64)
+    a2 = ref.pq_adc_ref(lut, codes)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,b,d", [(64, 8, 16), (123, 40, 48), (512, 128, 128)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kmeans_assign_matches_ref(n, b, d, dtype):
+    rng = np.random.default_rng(n * b)
+    x = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(b, d)), dtype)
+    a1, d1 = ops.kmeans_assign(x, c, impl="interpret", tn=16, tb=8)
+    a2, d2 = ref.kmeans_assign_ref(x, c)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    # argmin can differ under bf16 rounding only where distances tie
+    close = np.isclose(np.asarray(d1), np.asarray(d2), rtol=tol, atol=tol)
+    assert close.mean() > 0.99
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    qn=st.integers(1, 16),
+    cn=st.integers(8, 128),
+    d=st.integers(2, 64),
+    k=st.integers(1, 8),
+)
+def test_l2_topk_properties(qn, cn, d, k):
+    """Invariants: outputs sorted ascending, ids valid, dists non-negative,
+    and top-1 equals exact argmin."""
+    k = min(k, cn)
+    rng = np.random.default_rng(qn + cn * 1000 + d)
+    q = jnp.asarray(rng.normal(size=(qn, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(cn, d)).astype(np.float32))
+    ids = jnp.asarray(np.arange(cn, dtype=np.int32))
+    dd, ii = ops.l2_topk(q, c, ids, k, impl="ref")
+    dd, ii = np.asarray(dd), np.asarray(ii)
+    assert (np.diff(dd, axis=1) >= -1e-5).all()
+    assert ((ii >= 0) & (ii < cn)).all()
+    assert (dd >= -1e-4).all()
+    exact = ((np.asarray(q)[:, None] - np.asarray(c)[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(ii[:, 0], exact.argmin(1))
+
+
+def test_l2_topk_interpret_vs_ref_large_k_padding():
+    """k larger than real candidates -> padded ids must be -1-masked."""
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32))
+    ids = jnp.asarray(np.arange(16, dtype=np.int32)).at[8:].set(-1)
+    d1, i1 = ops.l2_topk(q, c, ids, 12, impl="interpret", tq=4, tc=8)
+    # only 8 valid candidates: the tail of top-12 must be padding
+    assert (np.asarray(i1)[:, 8:] == -1).all()
+    assert not np.isfinite(np.asarray(d1)[:, 8:]).any() or (np.asarray(d1)[:, 8:] > 1e20).all()

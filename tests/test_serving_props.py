@@ -1,0 +1,86 @@
+"""Property-based tests for the distributed serving engine's dispatch
+invariants (hypothesis): results must match brute force whenever the probe
+budget covers the true nearest partitions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import LiraSystemConfig
+from repro.core import probing
+from repro.launch.mesh import make_test_mesh
+from repro.serving.engine import make_serve_step
+
+MESH = None
+
+
+def _mesh():
+    global MESH
+    if MESH is None:
+        MESH = make_test_mesh()
+    return MESH
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([2, 4, 8]),
+    cap=st.sampled_from([16, 32]),
+    nq=st.sampled_from([8, 16]),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 10**6),
+)
+def test_full_probe_equals_bruteforce(b, cap, nq, k, seed):
+    """σ=-1 probes every partition (nprobe_max=B): the distributed engine must
+    return EXACTLY the brute-force top-k ids for every query."""
+    dim = 8
+    host = np.random.default_rng(seed)
+    vecs = host.normal(0, 1, (b, cap, dim)).astype(np.float32)
+    ids = np.arange(b * cap, dtype=np.int32).reshape(b, cap)
+    cfg = LiraSystemConfig(arch="t", dim=dim, n_partitions=b, capacity=cap,
+                           k=k, nprobe_max=b)
+    store = {"centroids": jnp.asarray(vecs.mean(1)), "vectors": jnp.asarray(vecs),
+             "ids": jnp.asarray(ids)}
+    params = probing.init(jax.random.PRNGKey(0),
+                          probing.ProbingConfig(dim=dim, n_partitions=b))
+    q = host.normal(0, 1, (nq, dim)).astype(np.float32)
+    fn = make_serve_step(cfg, _mesh(), nq, sigma=-1.0, q_cap_factor=float(nq))
+    with _mesh():
+        d, i, npb = jax.jit(fn)(params, store, jnp.asarray(q))
+    flat = vecs.reshape(-1, dim)
+    exact = ((q[:, None] - flat[None]) ** 2).sum(-1)
+    for r in range(nq):
+        want = set(np.argsort(exact[r])[:k].tolist())
+        got = set(np.asarray(i)[r].tolist())
+        # allow tie-order differences only: compare distance multisets too
+        assert got == want or np.allclose(
+            sorted(exact[r][sorted(got)]), sorted(exact[r][sorted(want)]), atol=1e-5)
+    assert float(np.asarray(npb).mean()) == b
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6), sigma=st.floats(0.05, 0.9))
+def test_partial_probe_results_are_valid_and_sorted(seed, sigma):
+    """Any σ: returned ids are real (or -1 padding), distances ascending, and
+    adaptive nprobe ∈ [1, nprobe_max]."""
+    b, cap, dim, nq, k = 4, 16, 8, 8, 5
+    host = np.random.default_rng(seed)
+    vecs = host.normal(0, 1, (b, cap, dim)).astype(np.float32)
+    ids = np.arange(b * cap, dtype=np.int32).reshape(b, cap)
+    cfg = LiraSystemConfig(arch="t", dim=dim, n_partitions=b, capacity=cap,
+                           k=k, nprobe_max=2)
+    store = {"centroids": jnp.asarray(vecs.mean(1)), "vectors": jnp.asarray(vecs),
+             "ids": jnp.asarray(ids)}
+    params = probing.init(jax.random.PRNGKey(1),
+                          probing.ProbingConfig(dim=dim, n_partitions=b))
+    q = host.normal(0, 1, (nq, dim)).astype(np.float32)
+    fn = make_serve_step(cfg, _mesh(), nq, sigma=float(sigma), q_cap_factor=8.0)
+    with _mesh():
+        d, i, npb = jax.jit(fn)(params, store, jnp.asarray(q))
+    d, i, npb = np.asarray(d), np.asarray(i), np.asarray(npb)
+    finite = np.isfinite(d)
+    assert ((i >= -1) & (i < b * cap)).all()
+    assert (i[finite] >= 0).all()
+    for r in range(nq):
+        dr = d[r][np.isfinite(d[r])]
+        assert (np.diff(dr) >= -1e-5).all()
+    assert (npb >= 1).all() and (npb <= 2).all()
