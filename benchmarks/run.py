@@ -11,6 +11,7 @@ import sys
 import time
 
 SUITES = [
+    ("eval_merge", "benchmarks.eval_merge"),
     ("fig2", "benchmarks.fig2_motivation"),
     ("fig11", "benchmarks.fig11_convergence"),
     ("table1", "benchmarks.table1_vary_k"),
@@ -26,6 +27,10 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated suite names")
     args = ap.parse_args()
     only = {s for s in args.only.split(",") if s}
+    unknown = only - {tag for tag, _ in SUITES}
+    if unknown:  # a typo'd --only must not pass vacuously in CI
+        print(f"unknown suite(s): {','.join(sorted(unknown))}", file=sys.stderr)
+        sys.exit(2)
 
     out_path = pathlib.Path(__file__).resolve().parent / "results" / "bench.csv"
     out_path.parent.mkdir(parents=True, exist_ok=True)
@@ -39,6 +44,7 @@ def main() -> None:
 
     import importlib
 
+    failed: list[str] = []
     t_all = time.time()
     for tag, mod_name in SUITES:
         if only and tag not in only:
@@ -49,12 +55,16 @@ def main() -> None:
             mod.run(emit)
             emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, "ok")
         except Exception as e:  # keep the harness going; record the failure
+            failed.append(tag)
             emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, f"FAIL:{type(e).__name__}:{e}")
             import traceback
 
             traceback.print_exc()
     emit("_total_seconds", (time.time() - t_all) * 1e6, "")
     out_path.write_text("\n".join(rows) + "\n")
+    if failed:  # a half-run must not look green (CI smoke relies on this)
+        print(f"FAILED suites: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.kmeans import centroid_distances
 from repro.core.partitions import PAD_ID, PartitionStore
+from repro.kernels.dedup_topk import dedup_topk_np
 
 
 class PartitionTopK(NamedTuple):
@@ -90,6 +91,73 @@ class SearchResult(NamedTuple):
     per_query_recall: np.ndarray
 
 
+def _take_smallest(d: np.ndarray, i: np.ndarray, pool: int):
+    """Exact smallest-`pool` columns per row (unordered) via argpartition."""
+    if pool >= d.shape[1]:
+        return d, i
+    part = np.argpartition(d, pool - 1, axis=1)[:, :pool]
+    return np.take_along_axis(d, part, 1), np.take_along_axis(i, part, 1)
+
+
+def _select_pool(dists3: np.ndarray, ids3: np.ndarray, mask: np.ndarray, pool: int,
+                 *, j0: int | None = None):
+    """Exact smallest-`pool` (dists, ids) per query over probed partitions.
+
+    Lazy k-way merge: each partition's slice is sorted ascending (inf-padded),
+    so the global smallest-`pool` almost always lives in the first `j` columns
+    of each probed partition. Select there, then verify per row against the
+    smallest FIRST-EXCLUDED entry (column j over probed partitions): rows
+    where an excluded entry could beat the selected pool escalate — window
+    doubling if many, per-row full argpartition if few. Exact results at
+    ~j/kk of the full scan cost (and the full [Q, B·kk] distance matrix is
+    never masked or copied on the fast path).
+    """
+    qn, b, kk = dists3.shape
+    if j0 is None:
+        # window sized so ~3× the pool fits in the probed partitions' heads:
+        # keeps the verify-failure (escalation) rate near zero in practice
+        nprobe_mean = max(1.0, float(mask.sum(1).mean()))
+        j0 = int(np.ceil(3.0 * pool / nprobe_mean))
+    j = min(kk, max(8, j0))
+    while True:
+        if j >= kk or b * j <= pool:
+            flat_d = np.where(mask[:, :, None], dists3, np.inf).reshape(qn, b * kk)
+            return _take_smallest(flat_d, np.ascontiguousarray(ids3).reshape(qn, b * kk), pool)
+        cand_d = np.where(mask[:, :, None], dists3[:, :, :j], np.inf).reshape(qn, b * j)
+        cand_i = np.ascontiguousarray(ids3[:, :, :j]).reshape(qn, b * j)
+        pd, pi = _take_smallest(cand_d, cand_i, pool)
+        tau = pd.max(1)                                      # worst selected
+        excl = np.where(mask, dists3[:, :, j], np.inf).min(1)  # best excluded
+        bad = ~(excl > tau)            # also catches tau=inf (pool not filled)
+        if not bad.any():
+            return pd, pi
+        if bad.mean() > 0.05 and 2 * j < kk:
+            j *= 2
+            continue
+        flat_d = np.where(mask[bad][:, :, None], dists3[bad], np.inf).reshape(-1, b * kk)
+        pd[bad], pi[bad] = _take_smallest(flat_d, ids3[bad].reshape(-1, b * kk), pool)
+        return pd, pi
+
+
+def _count_hits(top_i: np.ndarray, gt: np.ndarray) -> np.ndarray:
+    """hits[r] = |top_i[r] ∩ gt[r]| via one flat searchsorted (ids are unique
+    per row after dedup; PAD_ID never matches a ground-truth id)."""
+    qn, k = gt.shape
+    base = np.arange(qn, dtype=np.int64)[:, None] << 32
+    hay = np.sort(top_i.astype(np.int64) + base, axis=1).ravel()
+    needles = gt.astype(np.int64) + base
+    pos = np.searchsorted(hay, needles.ravel())
+    pos = np.clip(pos, 0, hay.size - 1)
+    return (hay[pos] == needles.ravel()).reshape(qn, k).sum(1)
+
+
+def merge_topk(ptk: PartitionTopK, probe_mask: np.ndarray, k: int, *, dedup_pool: int = 2):
+    """Dedup'd global top-k (dists, ids) for a probe mask — serving-shaped output."""
+    qn, b, kk = ptk.dists.shape
+    pool_d, pool_i = _select_pool(ptk.dists, ptk.ids, probe_mask, min(dedup_pool * k, b * kk))
+    return dedup_topk_np(pool_d, pool_i, k)
+
+
 def evaluate_probe(
     ptk: PartitionTopK,
     probe_mask: np.ndarray,
@@ -99,33 +167,15 @@ def evaluate_probe(
     dedup_pool: int = 2,
 ) -> SearchResult:
     """Merge within-partition top-k of probed partitions; exact re-rank; dedup
-    replica ids (redundant stores repeat an id across partitions)."""
+    replica ids (redundant stores repeat an id across partitions — paper §3.3).
+    Fully vectorized: lazy k-way pool selection + sort-based dedup_topk, no
+    per-query Python loops."""
     qn, b, kk = ptk.dists.shape
-    masked = np.where(probe_mask[:, :, None], ptk.dists, np.inf).reshape(qn, b * kk)
-    flat_ids = np.broadcast_to(ptk.ids.reshape(qn, b * kk), masked.shape)
-    pool = min(dedup_pool * k, masked.shape[1])
-    part = np.argpartition(masked, pool - 1, axis=1)[:, :pool]
-    pool_d = np.take_along_axis(masked, part, 1)
-    pool_i = np.take_along_axis(flat_ids, part, 1)
-    order = np.argsort(pool_d, 1)
-    pool_d = np.take_along_axis(pool_d, order, 1)
-    pool_i = np.take_along_axis(pool_i, order, 1)
+    pool_d, pool_i = _select_pool(ptk.dists, ptk.ids, probe_mask, min(dedup_pool * k, b * kk))
+    _, top_i = dedup_topk_np(pool_d, pool_i, k)
+    hits = _count_hits(top_i, np.ascontiguousarray(gt_ids[:, :k]))
 
-    hits = np.zeros(qn, np.float64)
-    for r in range(qn):
-        seen: set = set()
-        res = []
-        for c in range(pool):
-            i = int(pool_i[r, c])
-            if i == PAD_ID or not np.isfinite(pool_d[r, c]) or i in seen:
-                continue
-            seen.add(i)
-            res.append(i)
-            if len(res) == k:
-                break
-        hits[r] = len(set(res) & set(gt_ids[r, :k].tolist()))
-
-    per_recall = hits / k
+    per_recall = hits.astype(np.float64) / k
     per_cmp = (probe_mask * ptk.counts[None, :]).sum(-1)
     per_np = probe_mask.sum(-1)
     return SearchResult(
@@ -151,32 +201,15 @@ def merge_groups(
     """BLISS-style multi-group merge with EXACT dedup'd cmp accounting:
     visited(q) = |∪_g {points whose group-g partition is probed}|."""
     qn = masks[0].shape[0]
-    # recall via per-group pools
+    # recall via per-group pools, merged with the replica-aware dedup primitive
     pools_d, pools_i = [], []
     for ptk, m in zip(ptks, masks):
         b, kk = ptk.dists.shape[1:]
-        md = np.where(m[:, :, None], ptk.dists, np.inf).reshape(qn, b * kk)
-        mi = ptk.ids.reshape(qn, b * kk)
-        take = min(k, md.shape[1])
-        part = np.argpartition(md, take - 1, 1)[:, :take]
-        pools_d.append(np.take_along_axis(md, part, 1))
-        pools_i.append(np.take_along_axis(mi, part, 1))
-    pd = np.concatenate(pools_d, 1)
-    pi = np.concatenate(pools_i, 1)
-    order = np.argsort(pd, 1)
-    pd = np.take_along_axis(pd, order, 1)
-    pi = np.take_along_axis(pi, order, 1)
-    hits = np.zeros(qn)
-    for r in range(qn):
-        seen: set = set()
-        for c in range(pd.shape[1]):
-            i = int(pi[r, c])
-            if i == PAD_ID or not np.isfinite(pd[r, c]) or i in seen:
-                continue
-            seen.add(i)
-            if len(seen) == k:
-                break
-        hits[r] = len(seen & set(gt_ids[r, :k].tolist()))
+        pd, pi = _select_pool(ptk.dists, ptk.ids, m, min(k, b * kk))
+        pools_d.append(pd)
+        pools_i.append(pi)
+    _, top_i = dedup_topk_np(np.concatenate(pools_d, 1), np.concatenate(pools_i, 1), k)
+    hits = _count_hits(top_i, np.ascontiguousarray(gt_ids[:, :k])).astype(np.float64)
 
     # exact dedup'd visited counts, blocked over queries
     per_cmp = np.zeros(qn, np.int64)

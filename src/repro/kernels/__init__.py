@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the ANN scoring hot path.
 
   l2_topk       — fused gather-score-topk partition scan (serving hot path)
+  dedup_topk    — replica-aware merge: bitonic (id, dist) sort + first-
+                  occurrence mask + top-k (redundancy dedup, paper §3.3)
   pq_adc        — PQ LUT scan as one-hot MXU contraction (IVFPQ)
   kmeans_assign — fused distance+argmin (index build at 50M+ points)
 

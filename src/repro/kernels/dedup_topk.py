@@ -1,0 +1,165 @@
+"""Replica-aware dedup'd merge: exact global top-k over candidate pools.
+
+LIRA's learned redundancy (paper §3.3) stores replicas of boundary points in
+several partitions under the SAME id, so every merge of per-partition top-k
+pools must collapse duplicate ids down to their best distance before taking
+the global top-k. The host evaluation engine used to do this with per-query
+Python set-loops; this kernel is the vectorized primitive that replaces them
+(and plugs the serving engine's missing dedup).
+
+Algorithm (sort-based, no hash tables — TPU/XLA friendly):
+  1. remap invalid entries (id < 0 padding, non-finite distance = masked-out
+     partition) to an id sentinel that sorts last;
+  2. sort each row by (id, dist) lexicographically — a bitonic network here,
+     two stable argsorts in the jnp reference (ref.dedup_topk_ref);
+  3. first-occurrence mask: after the sort every duplicate id is adjacent and
+     the best (smallest-distance) copy comes first; kill the rest;
+  4. top-k by distance over the survivors.
+
+Grid: (Q_tiles,) — the pool axis stays fully resident in VMEM so the bitonic
+network runs on-chip per query tile. Pool width must be a power of two
+(ops.py pads). VMEM per step ≈ 2·TQ·P·4 B (TQ=8, P=8192 → 512 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+PAD_ID = -1            # matches repro.core.partitions.PAD_ID
+BIG = 1e30             # finite distance sentinel (inf arithmetic is unsafe on VPU)
+ID_SENTINEL = 2**30    # id sentinel: sorts after every real id
+
+
+def dedup_topk_np(dists: np.ndarray, ids: np.ndarray, k: int):
+    """Numpy twin of ref.dedup_topk_ref for host-side callers (the evaluation
+    engine), where numpy sorts are ~20× faster than XLA:CPU's.
+
+    One sort instead of two: pack (id, dist) into a single uint64 key — the
+    high 32 bits are the id, the low 32 the IEEE-754 total-order image of the
+    float32 distance (sign bit set for non-negative floats, bitwise-NOT for
+    negative ones — a monotone uint32 map incl. ±0/inf/nan). Sorting the key
+    groups ids with the best distance first, exactly like the lexicographic
+    bitonic network in the Pallas kernel.
+    """
+    q, p = dists.shape
+    d = np.ascontiguousarray(dists, dtype=np.float32)
+    ids = np.asarray(ids, np.int32)
+    valid = (ids >= 0) & np.isfinite(d)
+    d_s = np.where(valid, d, np.inf)
+    ids_s = np.where(valid, ids, ID_SENTINEL)
+    u = np.ascontiguousarray(d_s).view(np.uint32)
+    du = np.where(u & 0x80000000, ~u, u | 0x80000000).astype(np.uint64)
+    key = (ids_s.astype(np.uint64) << np.uint64(32)) | du
+    order = np.argsort(key, axis=1)
+    k2 = np.take_along_axis(key, order, 1)
+    i2 = np.take_along_axis(ids_s, order, 1)
+    d2 = np.take_along_axis(d_s, order, 1)
+    first = np.concatenate([np.ones((q, 1), bool), i2[:, 1:] != i2[:, :-1]], axis=1)
+    keep = first & (i2 != ID_SENTINEL)
+    d3 = np.where(keep, d2, np.inf)
+    # final selection orders by (dist, id) — swap the key halves so distance
+    # leads and ids break exact-distance ties deterministically (matches the
+    # jnp ref / bitonic kernel, which inherit this from the grouped sort)
+    fkey = np.where(keep, (k2 << np.uint64(32)) | (k2 >> np.uint64(32)),
+                    np.uint64(0xFFFFFFFFFFFFFFFF))
+    kk = min(k, p)
+    if kk < p:
+        part = np.argpartition(fkey, kk - 1, axis=1)[:, :kk]
+        fkey = np.take_along_axis(fkey, part, 1)
+        d3 = np.take_along_axis(d3, part, 1)
+        i2 = np.take_along_axis(i2, part, 1)
+    o3 = np.argsort(fkey, axis=1)
+    out_d = np.full((q, k), np.inf, np.float32)
+    out_i = np.full((q, k), PAD_ID, np.int32)
+    out_d[:, :kk] = np.take_along_axis(d3, o3, 1)
+    oi = np.take_along_axis(i2, o3, 1)
+    out_i[:, :kk] = np.where(np.isfinite(out_d[:, :kk]), oi, PAD_ID)
+    return out_d, out_i
+
+
+def _lex_le(id_a, d_a, id_b, d_b):
+    """Lexicographic (id, dist) <=."""
+    return (id_a < id_b) | ((id_a == id_b) & (d_a <= d_b))
+
+
+def _bitonic_sort_by_id_dist(ids, d):
+    """Ascending (id, dist) bitonic sort along the last axis (power-of-two P).
+
+    The compare-exchange partner (index XOR 2^t) is materialized by reshaping
+    to [..., P/(2^(t+1)), 2, 2^t] and swapping the middle halves — no gathers.
+    Static Python loops: the O(log² P) network unrolls at trace time.
+    """
+    q, p = ids.shape
+    n_stage = p.bit_length() - 1
+    for s in range(1, n_stage + 1):          # merge blocks of size 2^s
+        for t in range(s - 1, -1, -1):       # partner distance 2^t
+            j = 1 << t
+            i4 = ids.reshape(q, p // (2 * j), 2, j)
+            d4 = d.reshape(q, p // (2 * j), 2, j)
+            id_lo, id_hi = i4[:, :, 0, :], i4[:, :, 1, :]
+            d_lo, d_hi = d4[:, :, 0, :], d4[:, :, 1, :]
+            # ascending iff bit s of the flat index is 0; the flat index is
+            # blk·2^(t+1) + h·2^t + w, so bit s == bit (s-t-1) of blk
+            blk = jax.lax.broadcasted_iota(jnp.int32, id_lo.shape, 1)
+            asc = ((blk >> (s - t - 1)) & 1) == 0
+            keep = _lex_le(id_lo, d_lo, id_hi, d_hi) == asc
+            ids = jnp.stack(
+                [jnp.where(keep, id_lo, id_hi), jnp.where(keep, id_hi, id_lo)], axis=2
+            ).reshape(q, p)
+            d = jnp.stack(
+                [jnp.where(keep, d_lo, d_hi), jnp.where(keep, d_hi, d_lo)], axis=2
+            ).reshape(q, p)
+    return ids, d
+
+
+def _dedup_topk_kernel(d_ref, i_ref, od_ref, oi_ref, *, k: int):
+    d = d_ref[...].astype(jnp.float32)
+    ids = i_ref[...]
+    invalid = (ids < 0) | ~(d < BIG)          # padding, masked-out (inf), or nan
+    ids = jnp.where(invalid, ID_SENTINEL, ids)
+    d = jnp.where(invalid, BIG, d)
+    ids, d = _bitonic_sort_by_id_dist(ids, d)
+    # adjacent-duplicate kill: the first copy of each id carries its best dist
+    prev = jnp.concatenate([jnp.full((ids.shape[0], 1), -2, ids.dtype), ids[:, :-1]], axis=1)
+    d = jnp.where((ids == prev) | (ids == ID_SENTINEL), BIG, d)
+    neg, pos = jax.lax.top_k(-d, k)
+    od = -neg
+    good = od < BIG
+    od_ref[...] = jnp.where(good, od, jnp.inf)
+    oi_ref[...] = jnp.where(good, jnp.take_along_axis(ids, pos, axis=1), PAD_ID)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tq", "interpret"))
+def dedup_topk(
+    dists: jax.Array,   # [Q, P] f32 — Q multiple of tq, P a power of two
+    ids: jax.Array,     # [Q, P] i32, <0 = padding
+    k: int,
+    *,
+    tq: int = 8,
+    interpret: bool = True,
+):
+    qn, p = dists.shape
+    assert qn % tq == 0 and p & (p - 1) == 0, (qn, tq, p)
+    assert 0 < k <= p, (k, p)
+    kernel = functools.partial(_dedup_topk_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(qn // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, p), lambda i: (i, 0)),
+            pl.BlockSpec((tq, p), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dists, ids)

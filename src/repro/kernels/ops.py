@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels import dedup_topk as _dd
 from repro.kernels import l2_topk as _l2
 from repro.kernels import pq_adc as _adc
 from repro.kernels import kmeans_assign as _km
@@ -47,6 +48,27 @@ def l2_topk(q, cands, cand_ids, k: int, *, impl: str | None = None, tq: int = 25
     k_eff = min(k, cp.shape[0])
     d, i = _l2.l2_topk(qp, cp, ip, k_eff, tq=tq_eff, tc=min(tc, cp.shape[0]), interpret=interpret)
     return d[:qn, :k], i[:qn, :k]
+
+
+def dedup_topk(dists, ids, k: int, *, impl: str | None = None, tq: int = 8):
+    """Replica-aware merge: collapse duplicate ids to their best distance, then
+    exact global top-k. Handles arbitrary Q/P via row + power-of-two padding."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return _ref.dedup_topk_ref(dists, ids, k)
+    interpret = impl == "interpret" or jax.default_backend() != "tpu"
+    qn, p = dists.shape
+    p2 = max(2, 1 << (max(p, k) - 1).bit_length())
+    dists = dists.astype(jnp.float32)
+    ids = ids.astype(jnp.int32)
+    if p2 > p:  # pad the pool with invalid entries
+        dists = jnp.concatenate([dists, jnp.full((qn, p2 - p), jnp.inf, jnp.float32)], axis=1)
+        ids = jnp.concatenate([ids, jnp.full((qn, p2 - p), -1, jnp.int32)], axis=1)
+    tq_eff = min(tq, max(8, qn))
+    dp = _pad_rows(dists, tq_eff, jnp.inf)
+    ip = _pad_rows(ids, tq_eff, -1)
+    d, i = _dd.dedup_topk(dp, ip, k, tq=tq_eff, interpret=interpret)
+    return d[:qn], i[:qn]
 
 
 def pq_adc(lut, codes, *, impl: str | None = None, tq: int = 128, tn: int = 128):

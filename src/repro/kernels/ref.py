@@ -30,6 +30,40 @@ def pq_adc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
     return jax.vmap(per_query)(lut.astype(jnp.float32))
 
 
+def dedup_topk_ref(dists: jax.Array, ids: jax.Array, k: int):
+    """Exact replica-aware merge of a candidate pool (jnp oracle).
+
+    [Q,P] dists (non-finite = masked/invalid) × [Q,P] ids (<0 = padding) →
+    ([Q,k] ascending dists inf-padded, [Q,k] ids -1-padded). Each id appears at
+    most once per row, carrying its smallest distance. Same sort-based scheme
+    as the Pallas kernel: sort by dist, stable-sort by id (so per-id groups
+    stay distance-ordered), kill adjacent duplicates, top-k the survivors.
+    """
+    q, p = dists.shape
+    d = dists.astype(jnp.float32)
+    ids = ids.astype(jnp.int32)
+    if p < k:  # degenerate pools: pad so top_k is well-defined
+        d = jnp.concatenate([d, jnp.full((q, k - p), jnp.inf, jnp.float32)], axis=1)
+        ids = jnp.concatenate([ids, jnp.full((q, k - p), -1, jnp.int32)], axis=1)
+        p = k
+    sentinel = jnp.int32(2**30)
+    valid = (ids >= 0) & jnp.isfinite(d)
+    ids = jnp.where(valid, ids, sentinel)
+    d = jnp.where(valid, d, jnp.inf)
+    o1 = jnp.argsort(d, axis=1)
+    i1 = jnp.take_along_axis(ids, o1, 1)
+    d1 = jnp.take_along_axis(d, o1, 1)
+    o2 = jnp.argsort(i1, axis=1, stable=True)
+    i2 = jnp.take_along_axis(i1, o2, 1)
+    d2 = jnp.take_along_axis(d1, o2, 1)
+    first = jnp.concatenate([jnp.ones((q, 1), bool), i2[:, 1:] != i2[:, :-1]], axis=1)
+    d3 = jnp.where(first & (i2 != sentinel), d2, jnp.inf)
+    neg, pos = jax.lax.top_k(-d3, k)
+    out_d = -neg
+    out_i = jnp.where(jnp.isfinite(out_d), jnp.take_along_axis(i2, pos, 1), -1)
+    return out_d, out_i
+
+
 def kmeans_assign_ref(x: jax.Array, centroids: jax.Array):
     x = x.astype(jnp.float32)
     c = centroids.astype(jnp.float32)

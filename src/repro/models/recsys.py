@@ -26,7 +26,7 @@ from repro.configs.base import RecsysConfig
 from repro.models.api import ModelBundle, ShapeSpec, StepDef, adamw_state_pspecs, adamw_state_specs, sds
 from repro.train import optimizer as opt
 
-shard_map = jax.shard_map
+from repro.utils.compat import shard_map
 
 
 # ------------------------------------------------------------ embedding bag

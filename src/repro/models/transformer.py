@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map
+from repro.utils.compat import shard_map
 
 from repro.configs.base import LMConfig
 from repro.distributed.sharding import logical_to_pspec

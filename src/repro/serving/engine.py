@@ -34,10 +34,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import LiraSystemConfig, ShapeSpec
 from repro.core import probing
+from repro.kernels import ops as kops
 from repro.models.api import ModelBundle, StepDef, adamw_state_pspecs, adamw_state_specs, sds
 from repro.train import optimizer as opt
 
-shard_map = jax.shard_map
+from repro.utils.compat import shard_map
 
 
 def probing_param_specs(cfg: LiraSystemConfig):
@@ -132,17 +133,19 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         cols = jnp.broadcast_to(jnp.arange(b_loc)[:, None], qbuf.shape)
         out_d = out_d.at[qbuf, cols].set(dists, mode="drop")
         out_i = out_i.at[qbuf, cols].set(rids, mode="drop")
-        neg, posk = jax.lax.top_k(-out_d[:q_row].reshape(q_row, -1), k)
-        loc_d = -neg
-        loc_i = jnp.take_along_axis(out_i[:q_row].reshape(q_row, -1), posk, -1)
+        # replica-aware local merge: redundancy (η>0) stores the same id in
+        # several partitions, so a plain top-k would return duplicate ids and
+        # corrupt recall@k — dedup to best-distance-per-id instead (backend
+        # dispatch: bitonic Pallas kernel on TPU, jnp sorts elsewhere)
+        loc_d, loc_i = kops.dedup_topk(
+            out_d[:q_row].reshape(q_row, -1), out_i[:q_row].reshape(q_row, -1), k)
 
-        # ---- cross-shard merge (O(Q·k·shards) bytes — independent of N)
+        # ---- cross-shard merge (O(Q·k·shards) bytes — independent of N);
+        # replicas of one id can live on different shards, so dedup again
         if model_n > 1:
             all_d = jax.lax.all_gather(loc_d, "model", axis=1, tiled=True)   # [q_row, 16k]
             all_i = jax.lax.all_gather(loc_i, "model", axis=1, tiled=True)
-            neg, posk = jax.lax.top_k(-all_d, k)
-            loc_d = -neg
-            loc_i = jnp.take_along_axis(all_i, posk, -1)
+            loc_d, loc_i = kops.dedup_topk(all_d, all_i, k)
         nprobe_eff = probe_ok.sum(-1).astype(jnp.float32)
         return loc_d, loc_i, nprobe_eff
 

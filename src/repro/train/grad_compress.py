@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.utils.compat import shard_map
+
 
 def _quantize(x: jax.Array):
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
@@ -37,7 +39,7 @@ def compressed_psum_pod(grads, err, mesh):
             tot = jax.lax.psum(deq, "pod") / npod
             return tot, new_e
 
-        return jax.shard_map(
+        return shard_map(
             f, mesh=mesh,
             in_specs=(P(), P()), out_specs=(P(), P()),
             check_vma=False,

@@ -1,0 +1,38 @@
+"""Version-compat shims so the tree imports and runs on every jax we support.
+
+`shard_map` graduated from `jax.experimental.shard_map` to a top-level
+`jax.shard_map` (and its `check_rep` kwarg was renamed `check_vma`) in newer
+releases; the CI/container image pins an 0.4.x jax where only the experimental
+spelling exists. All repo code imports `shard_map` from here and uses the new
+`check_vma` name — the shim translates for old jax.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+
+try:
+    _shard_map = jax.shard_map  # jax >= 0.5: top-level API
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+def make_mesh(shape, axis_names):
+    """jax.make_mesh with explicit Auto axis types where the API has them
+    (jax >= 0.5); plain make_mesh on 0.4.x, where Auto is the only behavior."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)

@@ -1,0 +1,45 @@
+"""Naive set/dict-based oracle for the replica-aware merge primitive — shared
+by the deterministic kernel sweeps and the hypothesis property tests."""
+import numpy as np
+
+
+def naive_dedup_topk(dists: np.ndarray, ids: np.ndarray, k: int):
+    """Per-row dict merge: keep each id's best finite distance, sort by
+    (dist, id), take k. inf/-1 padded exactly like the kernel."""
+    q, p = dists.shape
+    out_d = np.full((q, k), np.inf, np.float32)
+    out_i = np.full((q, k), -1, np.int32)
+    for r in range(q):
+        best: dict[int, float] = {}
+        for c in range(p):
+            idx = int(ids[r, c])
+            dist = float(dists[r, c])
+            if idx < 0 or not np.isfinite(dist):
+                continue
+            if idx not in best or dist < best[idx]:
+                best[idx] = dist
+        top = sorted(best.items(), key=lambda kv: (kv[1], kv[0]))[:k]
+        for c, (idx, dist) in enumerate(top):
+            out_d[r, c] = dist
+            out_i[r, c] = idx
+    return out_d, out_i
+
+
+def naive_pool_recall(pool_d: np.ndarray, pool_i: np.ndarray, gt_ids: np.ndarray, k: int):
+    """Per-query recall of the first-k-unique merge — the seed set-loop."""
+    qn = pool_d.shape[0]
+    order = np.argsort(pool_d, 1)
+    pool_d = np.take_along_axis(pool_d, order, 1)
+    pool_i = np.take_along_axis(pool_i, order, 1)
+    hits = np.zeros(qn, np.float64)
+    for r in range(qn):
+        seen: set = set()
+        for c in range(pool_d.shape[1]):
+            i = int(pool_i[r, c])
+            if i < 0 or not np.isfinite(pool_d[r, c]) or i in seen:
+                continue
+            seen.add(i)
+            if len(seen) == k:
+                break
+        hits[r] = len(seen & set(gt_ids[r, :k].tolist()))
+    return hits / k

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.utils.compat import make_mesh
+
 from repro.configs import ARCH_IDS, get_smoke
 from repro.data.smoke import make_smoke_inputs
 from repro.models import build_bundle
@@ -14,8 +16,7 @@ from repro.train import optimizer as opt
 @pytest.fixture(scope="module")
 def mesh():
     # single CPU device, both mesh axes size 1 — same code path as the pod
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _finite(tree):

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.launch import hlo_cost
+from repro.utils.compat import make_mesh, shard_map
 
 
 def _compile(fn, *specs, in_shardings=None):
@@ -29,8 +30,10 @@ def test_while_trip_count_multiplies_flops():
     res = hlo_cost.analyze(c.as_text())
     expect = L * 2 * B * D * D
     assert res["flops"] == pytest.approx(expect, rel=0.05), (res["flops"], expect)
-    xla = c.cost_analysis()["flops"]
-    assert xla < expect / 2  # demonstrates the XLA undercount
+    xla = c.cost_analysis()
+    if isinstance(xla, (list, tuple)):  # jax 0.4.x: one entry per device
+        xla = xla[0]
+    assert xla["flops"] < expect / 2  # demonstrates the XLA undercount
 
 
 def test_unrolled_matches_scanned():
@@ -54,11 +57,10 @@ def test_unrolled_matches_scanned():
 
 
 def test_collective_bytes_counted():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     def f(x):
-        return jax.shard_map(lambda a: jax.lax.psum(a, "model"), mesh=mesh,
+        return shard_map(lambda a: jax.lax.psum(a, "model"), mesh=mesh,
                              in_specs=jax.sharding.PartitionSpec(None, None),
                              out_specs=jax.sharding.PartitionSpec(None, None),
                              check_vma=False)(x)

@@ -1,0 +1,64 @@
+"""Hypothesis property sweeps for the kernels. hypothesis is an optional dev
+dep — importorskip makes a missing install skip this module instead of
+breaking tier-1 collection."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from _dedup_oracle import naive_dedup_topk
+from repro.kernels import ops
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    qn=st.integers(1, 16),
+    cn=st.integers(8, 128),
+    d=st.integers(2, 64),
+    k=st.integers(1, 8),
+)
+def test_l2_topk_properties(qn, cn, d, k):
+    """Invariants: outputs sorted ascending, ids valid, dists non-negative,
+    and top-1 equals exact argmin."""
+    k = min(k, cn)
+    rng = np.random.default_rng(qn + cn * 1000 + d)
+    q = jnp.asarray(rng.normal(size=(qn, d)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(cn, d)).astype(np.float32))
+    ids = jnp.asarray(np.arange(cn, dtype=np.int32))
+    dd, ii = ops.l2_topk(q, c, ids, k, impl="ref")
+    dd, ii = np.asarray(dd), np.asarray(ii)
+    assert (np.diff(dd, axis=1) >= -1e-5).all()
+    assert ((ii >= 0) & (ii < cn)).all()
+    assert (dd >= -1e-4).all()
+    exact = ((np.asarray(q)[:, None] - np.asarray(c)[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(ii[:, 0], exact.argmin(1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    qn=st.integers(1, 8),
+    p=st.integers(1, 96),
+    k=st.integers(1, 24),
+    n_ids=st.integers(1, 48),
+    frac_pad=st.floats(0.0, 0.6),
+    frac_inf=st.floats(0.0, 0.6),
+    impl=st.sampled_from(["ref", "interpret"]),
+    seed=st.integers(0, 10**6),
+)
+def test_dedup_topk_matches_set_oracle(qn, p, k, n_ids, frac_pad, frac_inf, impl, seed):
+    """Against a naive dict oracle across random replica rates (small n_ids →
+    heavy id collisions), PAD_ID padding, and inf-masked distances."""
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(0, n_ids, (qn, p)).astype(np.int32)
+    # per-row permutation of 0..p-1: all finite distances distinct, so the
+    # (dist, id) order is unambiguous and the comparison is exact
+    d = rng.permuted(np.tile(np.arange(p, dtype=np.float32), (qn, 1)), axis=1)
+    ids[rng.random((qn, p)) < frac_pad] = -1
+    d[rng.random((qn, p)) < frac_inf] = np.inf
+    d0, i0 = naive_dedup_topk(d, ids, k)
+    d1, i1 = ops.dedup_topk(jnp.asarray(d), jnp.asarray(ids), k, impl=impl)
+    np.testing.assert_allclose(np.asarray(d1), d0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), i0)

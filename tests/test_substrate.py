@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.utils.compat import make_mesh
+
 from repro.ckpt import CheckpointManager
 from repro.data.pipeline import PipelineSpec, TokenPipeline
 from repro.distributed.fault import ReplicaRouter, StragglerMitigator
@@ -139,8 +141,7 @@ def test_grad_compression_error_feedback():
     makes the RUNNING SUM converge to the true gradient sum."""
     from repro.train.grad_compress import compressed_psum_pod, init_error_buffers
 
-    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh((1, 1, 1), ("pod", "data", "model"))
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)).astype(np.float32))}
     err = init_error_buffers(g)
     total = jnp.zeros((64,))
