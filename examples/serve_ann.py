@@ -18,24 +18,30 @@ def main():
     ds = make_vector_dataset(n=20_000, n_queries=512, dim=64, n_modes=64, seed=2)
     mesh = make_test_mesh(data=1, model=1)  # production: make_production_mesh()
 
-    print("building LIRA engine (kmeans → probe training → redundancy → store)…")
+    print("building LIRA engine (kmeans → probe training → redundancy → store → PQ)…")
     t0 = time.time()
     engine = LiraEngine.build(mesh, ds.base, n_partitions=32, k=10, eta=0.05,
-                              train_frac=0.4, epochs=5, nprobe_max=8)
-    print(f"  built in {time.time()-t0:.0f}s; capacity={engine.cfg.capacity}")
+                              train_frac=0.4, epochs=5, nprobe_max=8,
+                              quantized=True, pq_m=16, rerank=16)
+    from repro.serving import scan_store_bytes
 
-    print("serving 512 queries (batched, jit'd, distributed serve_step)…")
-    t0 = time.time()
-    dists, ids, nprobe = engine.search(ds.queries, sigma=0.3)
-    dt = time.time() - t0
-    print(f"  {len(ds.queries)/dt:.0f} QPS (1-CPU container); mean adaptive nprobe={nprobe.mean():.2f}")
+    sb = scan_store_bytes(engine.store)
+    print(f"  built in {time.time()-t0:.0f}s; capacity={engine.cfg.capacity}; "
+          f"quantized scan store x{sb['ratio']:.1f} smaller")
 
-    # verify against brute force
     from repro.core import ground_truth as gt
+    from repro.core.metrics import recall_at_k
 
     _, gti = gt.exact_knn(ds.queries, ds.base, 10)
-    hits = sum(len(set(ids[r].tolist()) & set(gti[r].tolist())) for r in range(len(gti)))
-    print(f"  recall@10 = {hits / gti.size:.3f}")
+
+    # both tiers serve from the same engine: codes ride next to the f32 store
+    for tier, quantized in (("f32 exact scan", False), ("PQ/ADC + rerank", True)):
+        engine.search(ds.queries, sigma=0.3, quantized=quantized)  # warm the jit cache
+        t0 = time.time()
+        dists, ids, nprobe = engine.search(ds.queries, sigma=0.3, quantized=quantized)
+        dt = time.time() - t0
+        print(f"  [{tier}] {len(ds.queries)/dt:.0f} QPS (1-CPU container); "
+              f"mean nprobe={nprobe.mean():.2f}; recall@10={recall_at_k(ids, gti, 10):.3f}")
 
 
 if __name__ == "__main__":

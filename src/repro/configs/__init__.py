@@ -19,6 +19,7 @@ ARCH_IDS = (
     "mind",
     "dlrm_rm2",
     "lira_ann",
+    "lira_ann_q",
 )
 
 # CLI ids use dashes

@@ -141,6 +141,12 @@ class LiraSystemConfig:
     dtype: str = "float32"
     store_dtype: str = "float32"    # vector storage (bfloat16 halves scan reads)
     q_cap_factor: float = 2.0       # query-dispatch slack (compute ∝ this)
+    # quantized two-stage tier (serving/quantized.py): PQ/ADC shortlist over
+    # uint8 codes, exact f32 rerank of the r·k shortlist
+    quantized: bool = False
+    pq_m: int = 16                  # PQ subspaces (dim % pq_m == 0)
+    pq_ks: int = 256                # codewords/subspace (≤ 256 → uint8 codes)
+    rerank: int = 4                 # shortlist depth r: rerank r·k per partition
 
 
 LIRA_SHAPES: Sequence[ShapeSpec] = (

@@ -10,9 +10,21 @@ CONFIG = LiraSystemConfig(
 )
 SHAPES = LIRA_SHAPES
 
+# quantized two-stage tier: uint8 PQ codes (m=16, ks=256 → 16 B/slot vs 512 B
+# f32 = 32× smaller scan store), exact f32 rerank of the r·k shortlist
+CONFIG_QUANTIZED = LiraSystemConfig(
+    arch="lira-ann-q", dim=128, n_partitions=1024, capacity=65536, k=100,
+    nprobe_max=64, quantized=True, pq_m=16, pq_ks=256, rerank=4,
+)
+
 SMOKE = LiraSystemConfig(
     arch="lira-smoke", dim=16, n_partitions=16, capacity=64, k=10,
     nprobe_max=4,
+)
+
+SMOKE_QUANTIZED = LiraSystemConfig(
+    arch="lira-smoke-q", dim=16, n_partitions=16, capacity=64, k=10,
+    nprobe_max=4, quantized=True, pq_m=2, pq_ks=16, rerank=4,
 )
 SMOKE_SHAPES = (ShapeSpec("serve_sm", "lira_serve", {"n_queries": 64}),
                 ShapeSpec("train_sm", "lira_train", {"batch": 64}))

@@ -23,6 +23,15 @@ class PQCodebook(NamedTuple):
     ks: int
 
 
+def code_dtype(ks: int) -> np.dtype:
+    """Narrowest integer dtype that can hold a code in [0, ks)."""
+    if ks <= 256:
+        return np.dtype(np.uint8)
+    if ks <= 65536:
+        return np.dtype(np.uint16)
+    return np.dtype(np.int32)
+
+
 def train_pq(rng: jax.Array, x: np.ndarray, m: int = 16, ks: int = 256, n_iters: int = 15) -> PQCodebook:
     n, d = x.shape
     assert d % m == 0, f"dim {d} not divisible by m={m}"
@@ -37,10 +46,10 @@ def train_pq(rng: jax.Array, x: np.ndarray, m: int = 16, ks: int = 256, n_iters:
 
 
 def encode(pq: PQCodebook, x: np.ndarray, *, batch: int = 8192) -> np.ndarray:
-    """x -> codes [N, m] uint8/uint16."""
+    """x -> codes [N, m]; uint8 when ks ≤ 256, uint16 when ks ≤ 65536."""
     n, d = x.shape
     d_sub = d // pq.m
-    out = np.empty((n, pq.m), np.int32)
+    out = np.empty((n, pq.m), code_dtype(pq.ks))
 
     @jax.jit
     def enc(xb):
@@ -53,7 +62,7 @@ def encode(pq: PQCodebook, x: np.ndarray, *, batch: int = 8192) -> np.ndarray:
         return jnp.argmin(d2, -1).astype(jnp.int32)
 
     for s in range(0, n, batch):
-        out[s : s + batch] = np.asarray(enc(jnp.asarray(x[s : s + batch], jnp.float32)))
+        out[s : s + batch] = np.asarray(enc(jnp.asarray(x[s : s + batch], jnp.float32))).astype(out.dtype)
     return out
 
 
@@ -65,6 +74,7 @@ def decode(pq: PQCodebook, codes: np.ndarray, *, batch: int = 65536) -> np.ndarr
 
     @jax.jit
     def dec(cb):
+        cb = cb.astype(jnp.int32)  # accept uint8/uint16 code stores
         recon = jnp.take_along_axis(pq.codebooks[None], cb[:, :, None, None], axis=2)
         return recon[:, :, 0, :].reshape(cb.shape[0], -1)
 
@@ -73,14 +83,21 @@ def decode(pq: PQCodebook, codes: np.ndarray, *, batch: int = 65536) -> np.ndarr
     return out
 
 
-def adc_lut(pq: PQCodebook, q: jax.Array) -> jax.Array:
-    """Per-query LUT of subspace distances: [Q, m, ks]."""
-    qs = q.reshape(q.shape[0], pq.m, -1)
+def adc_lut_raw(codebooks: jax.Array, q: jax.Array) -> jax.Array:
+    """Per-query LUT of subspace distances from a raw [m, ks, d_sub] codebook
+    array: [Q, m, ks]. The serve step holds codebooks as a plain array, so
+    this is the shared implementation behind both call styles."""
+    qs = q.reshape(q.shape[0], codebooks.shape[0], -1)
     return (
         jnp.sum(qs * qs, -1)[..., None]
-        - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, pq.codebooks)
-        + jnp.sum(pq.codebooks * pq.codebooks, -1)[None]
+        - 2.0 * jnp.einsum("qmd,mkd->qmk", qs, codebooks)
+        + jnp.sum(codebooks * codebooks, -1)[None]
     )
+
+
+def adc_lut(pq: PQCodebook, q: jax.Array) -> jax.Array:
+    """Per-query LUT of subspace distances: [Q, m, ks]."""
+    return adc_lut_raw(pq.codebooks, q)
 
 
 def adc_distances(pq: PQCodebook, q: jax.Array, codes: jax.Array) -> jax.Array:

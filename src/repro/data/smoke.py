@@ -65,6 +65,16 @@ def make_smoke_inputs(config, shape, mesh, seed: int = 0):
                 "vectors": jnp.asarray(vecs),
                 "ids": jnp.asarray(ids),
             }
+            if getattr(config, "quantized", False):
+                from repro.core.pq import code_dtype
+
+                store["codes"] = jnp.asarray(host.integers(
+                    0, config.pq_ks,
+                    (config.n_partitions, config.capacity, config.pq_m),
+                ).astype(code_dtype(config.pq_ks)))
+                store["codebooks"] = jnp.asarray(host.normal(
+                    0, 1, (config.pq_m, config.pq_ks, config.dim // config.pq_m),
+                ).astype(np.float32))
             return {"store": store,
                     "queries": jnp.asarray(host.normal(0, 1, (nq, config.dim)).astype(np.float32))}
         if shape.kind == "lira_train":

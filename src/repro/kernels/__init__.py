@@ -4,6 +4,8 @@
   dedup_topk    — replica-aware merge: bitonic (id, dist) sort + first-
                   occurrence mask + top-k (redundancy dedup, paper §3.3)
   pq_adc        — PQ LUT scan as one-hot MXU contraction (IVFPQ)
+  pq_adc_topk   — fused LUT scan + running top-k shortlist (quantized tier
+                  stage 1: the [Q, N] ADC tile never leaves VMEM)
   kmeans_assign — fused distance+argmin (index build at 50M+ points)
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), oracle in ref.py,

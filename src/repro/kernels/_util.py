@@ -1,0 +1,18 @@
+"""Shared kernel-side helpers. ops.py imports every kernel module, so these
+live below both layers to avoid import cycles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel for negated-distance running top-k scratch: far below any real
+# -dist² so masked/uninitialized slots can never be selected.
+NEG_BIG = -1e30
+
+
+def pad_rows(a: jax.Array, mult: int, fill) -> jax.Array:
+    """Pad axis 0 up to a multiple of ``mult`` with ``fill``."""
+    pad = (-a.shape[0]) % mult
+    if pad == 0:
+        return a
+    return jnp.concatenate([a, jnp.full((pad, *a.shape[1:]), fill, a.dtype)], axis=0)

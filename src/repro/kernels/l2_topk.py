@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_BIG = -1e30
+from repro.kernels._util import NEG_BIG
 
 
 def _l2_topk_kernel(q_ref, c_ref, cid_ref, od_ref, oi_ref, run_d, run_i, *, k: int, n_cblocks: int):

@@ -21,17 +21,11 @@ from repro.kernels import pq_adc as _adc
 from repro.kernels import kmeans_assign as _km
 
 
+from repro.kernels._util import pad_rows as _pad_rows
+
+
 def _default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
-
-
-def _pad_rows(a: jax.Array, mult: int, fill):
-    n = a.shape[0]
-    pad = (-n) % mult
-    if pad == 0:
-        return a
-    pad_block = jnp.full((pad, *a.shape[1:]), fill, a.dtype)
-    return jnp.concatenate([a, pad_block], axis=0)
 
 
 def l2_topk(q, cands, cand_ids, k: int, *, impl: str | None = None, tq: int = 256, tc: int = 256):
@@ -76,13 +70,21 @@ def pq_adc(lut, codes, *, impl: str | None = None, tq: int = 128, tn: int = 128)
     impl = impl or _default_impl()
     if impl == "ref":
         return _ref.pq_adc_ref(lut, codes)
-    interpret = impl == "interpret" or jax.default_backend() != "tpu"
-    qn, n = lut.shape[0], codes.shape[0]
-    tq_eff = min(tq, max(8, qn))
-    lp = _pad_rows(lut, tq_eff, 0.0)
-    cp = _pad_rows(codes.astype(jnp.int32), tn, 0)
-    out = _adc.pq_adc(lp, cp, tq=tq_eff, tn=min(tn, cp.shape[0]), interpret=interpret)
-    return out[:qn, :n]
+    # interpret=None defers to the kernel's own backend detection (one policy)
+    return _adc.pq_adc(lut, codes, tq=tq, tn=tn,
+                       interpret=True if impl == "interpret" else None)
+
+
+def pq_adc_topk(lut, codes, cand_ids, k: int, *, impl: str | None = None,
+                tq: int = 128, tn: int = 128):
+    """Fused ADC scan + top-k shortlist: the quantized tier's stage 1.
+    Returns ([Q, k] ascending dists inf-padded, [Q, k] ids -1-padded); the
+    kernel's NEG_BIG-initialized scratch handles k > N pools natively."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return _ref.pq_adc_topk_ref(lut, codes, cand_ids, k)
+    return _adc.pq_adc_topk(lut, codes, cand_ids, k, tq=tq, tn=tn,
+                            interpret=True if impl == "interpret" else None)
 
 
 def kmeans_assign(x, centroids, *, impl: str | None = None, tn: int = 512, tb: int = 128):

@@ -1,4 +1,4 @@
-"""PQ asymmetric-distance (ADC) Pallas kernel.
+"""PQ asymmetric-distance (ADC) Pallas kernels.
 
 dist[q, n] = Σ_m LUT[q, m, codes[n, m]] — a gather-accumulate over the per-
 query lookup table. On TPU the gather over the ks lane axis is realized as a
@@ -6,10 +6,20 @@ one-hot contraction on the MXU (ks ≤ 256 keeps the one-hot tile cheap and
 turns random access into a dense dot — the standard TPU adaptation of the
 Faiss LUT scan; see DESIGN.md §3).
 
+Two entry points:
+  * ``pq_adc``       — full [Q, N] ADC distance matrix;
+  * ``pq_adc_topk``  — fused LUT-scan + running top-k shortlist (the quantized
+    serving tier's stage 1): the [Q, N] distance tile never round-trips to
+    HBM, only the [Q, k] shortlist survives — same scratch scheme as l2_topk.
+
 Tiling: grid = (Q_tiles, N_blocks); LUT tile [TQ, m·ks] stays in VMEM across
-the candidate scan, codes stream in as [TN, m] int32 blocks.
+the candidate scan, codes stream in as [TN, m] int blocks.
 VMEM per step ≈ TQ·m·ks + TN·m·ks (one-hot) + TQ·TN f32
 (TQ=128, TN=128, m=16, ks=256 → ~4.5 MB).
+
+Both wrappers pad Q/N to tile multiples internally (and strip the padding from
+outputs), and default ``interpret`` from the backend exactly like
+repro.kernels.ops: native compile on TPU, interpreter elsewhere.
 """
 from __future__ import annotations
 
@@ -18,6 +28,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import NEG_BIG, pad_rows as _pad_rows
+
+
+def _detect_interpret(interpret: bool | None) -> bool:
+    return jax.default_backend() != "tpu" if interpret is None else interpret
 
 
 def _pq_adc_kernel(lut_ref, codes_ref, out_ref, *, ks: int):
@@ -36,24 +53,110 @@ def _pq_adc_kernel(lut_ref, codes_ref, out_ref, *, ks: int):
 @functools.partial(jax.jit, static_argnames=("tq", "tn", "interpret"))
 def pq_adc(
     lut: jax.Array,    # [Q, m, ks] f32 per-query subspace distance tables
-    codes: jax.Array,  # [N, m] int32 PQ codes
+    codes: jax.Array,  # [N, m] integer PQ codes (uint8/uint16/int32)
     *,
     tq: int = 128,
     tn: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     qn, m, ks = lut.shape
     n = codes.shape[0]
-    assert qn % tq == 0 and n % tn == 0, (qn, tq, n, tn)
+    interpret = _detect_interpret(interpret)
+    tq = min(tq, max(8, qn))
+    tn = min(tn, max(8, n))
+    lp = _pad_rows(lut, tq, 0.0)
+    cp = _pad_rows(codes.astype(jnp.int32), tn, 0)
     kernel = functools.partial(_pq_adc_kernel, ks=ks)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
-        grid=(qn // tq, n // tn),
+        grid=(lp.shape[0] // tq, cp.shape[0] // tn),
         in_specs=[
             pl.BlockSpec((tq, m, ks), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((qn, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((lp.shape[0], cp.shape[0]), jnp.float32),
         interpret=interpret,
-    )(lut, codes.astype(jnp.int32))
+    )(lp, cp)
+    return out[:qn, :n]
+
+
+def _pq_adc_topk_kernel(lut_ref, codes_ref, cid_ref, od_ref, oi_ref, run_d, run_i,
+                        *, k: int, ks: int, n_nblocks: int):
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        run_d[...] = jnp.full_like(run_d, NEG_BIG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    lut = lut_ref[...]        # [TQ, m, ks] f32
+    codes = codes_ref[...]    # [TN, m] int32
+    cid = cid_ref[...]        # [TN] int32, -1 = padding
+    onehot = jax.nn.one_hot(codes, ks, dtype=lut.dtype)
+    d = jax.lax.dot_general(
+        lut.reshape(lut.shape[0], -1),
+        onehot.reshape(onehot.shape[0], -1),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [TQ, TN]
+    negd = jnp.where(cid[None, :] < 0, NEG_BIG, -d)
+    merged_d = jnp.concatenate([run_d[...], negd], axis=1)               # [TQ, k+TN]
+    merged_i = jnp.concatenate(
+        [run_i[...], jnp.broadcast_to(cid[None, :], negd.shape)], axis=1)
+    top_d, pos = jax.lax.top_k(merged_d, k)
+    run_d[...] = top_d
+    run_i[...] = jnp.take_along_axis(merged_i, pos, axis=1)
+
+    @pl.when(nb == n_nblocks - 1)
+    def _flush():
+        invalid = run_d[...] <= NEG_BIG / 2
+        od_ref[...] = jnp.where(invalid, jnp.inf, -run_d[...])
+        oi_ref[...] = jnp.where(invalid, -1, run_i[...])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tq", "tn", "interpret"))
+def pq_adc_topk(
+    lut: jax.Array,       # [Q, m, ks] f32 per-query subspace distance tables
+    codes: jax.Array,     # [N, m] integer PQ codes
+    cand_ids: jax.Array,  # [N] int32, -1 = padding
+    k: int,
+    *,
+    tq: int = 128,
+    tn: int = 128,
+    interpret: bool | None = None,
+):
+    """Fused ADC scan + running top-k: ([Q, k] dists asc, [Q, k] ids)."""
+    qn, m, ks = lut.shape
+    n = codes.shape[0]
+    interpret = _detect_interpret(interpret)
+    tq = min(tq, max(8, qn))
+    tn = min(tn, max(8, n))
+    lp = _pad_rows(lut, tq, 0.0)
+    cp = _pad_rows(codes.astype(jnp.int32), tn, 0)
+    ip = _pad_rows(cand_ids.astype(jnp.int32), tn, -1)
+    n_nblocks = cp.shape[0] // tn
+    kernel = functools.partial(_pq_adc_topk_kernel, k=k, ks=ks, n_nblocks=n_nblocks)
+    od, oi = pl.pallas_call(
+        kernel,
+        grid=(lp.shape[0] // tq, n_nblocks),
+        in_specs=[
+            pl.BlockSpec((tq, m, ks), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((lp.shape[0], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lp, cp, ip)
+    return od[:qn], oi[:qn]

@@ -30,6 +30,21 @@ def pq_adc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
     return jax.vmap(per_query)(lut.astype(jnp.float32))
 
 
+def pq_adc_topk_ref(lut: jax.Array, codes: jax.Array, cand_ids: jax.Array, k: int):
+    """Fused ADC + top-k oracle: ([Q,k] asc dists inf-padded, [Q,k] ids -1-padded)."""
+    d = pq_adc_ref(lut, codes)
+    ids = cand_ids.astype(jnp.int32)
+    d = jnp.where(ids[None, :] < 0, jnp.inf, d)
+    if d.shape[1] < k:  # degenerate pools: pad so top_k is well-defined
+        pad = k - d.shape[1]
+        d = jnp.concatenate([d, jnp.full((d.shape[0], pad), jnp.inf, d.dtype)], axis=1)
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)])
+    neg, pos = jax.lax.top_k(-d, k)
+    out_d = -neg
+    out_i = jnp.where(jnp.isfinite(out_d), ids[pos], -1)
+    return out_d, out_i
+
+
 def dedup_topk_ref(dists: jax.Array, ids: jax.Array, k: int):
     """Exact replica-aware merge of a candidate pool (jnp oracle).
 

@@ -24,13 +24,24 @@ def main():
     ap.add_argument("--partitions", type=int, default=32)
     ap.add_argument("--sigma", type=float, default=0.3)
     ap.add_argument("--pods", type=int, default=2, help="simulated index replicas")
+    ap.add_argument("--quantized", action="store_true",
+                    help="serve through the PQ/ADC shortlist + exact-rerank tier")
+    ap.add_argument("--rerank", type=int, default=8,
+                    help="quantized shortlist depth r (rerank r·k per partition)")
     args = ap.parse_args()
 
     ds = make_vector_dataset(n=args.n, n_queries=args.queries, dim=64, n_modes=64, seed=4)
     mesh = make_test_mesh()
     print("building index…")
     engine = LiraEngine.build(mesh, ds.base, n_partitions=args.partitions, k=10,
-                              eta=0.05, train_frac=0.4, epochs=5)
+                              eta=0.05, train_frac=0.4, epochs=5,
+                              quantized=args.quantized, rerank=args.rerank)
+    if args.quantized:
+        from repro.serving import scan_store_bytes
+
+        sb = scan_store_bytes(engine.store)
+        print(f"  quantized tier: m={engine.cfg.pq_m} ks={engine.cfg.pq_ks} "
+              f"rerank={engine.cfg.rerank}; scan store x{sb['ratio']:.1f} smaller")
 
     print(f"serving {args.queries} queries…")
     t0 = time.time()

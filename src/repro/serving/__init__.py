@@ -1,1 +1,2 @@
 from repro.serving.engine import make_bundle, LiraEngine  # noqa: F401
+from repro.serving.quantized import QuantizedStore, build_quantized_store, scan_store_bytes  # noqa: F401

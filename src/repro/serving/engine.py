@@ -12,8 +12,15 @@ serve_step:
      capacity `q_cap` (the MoE-dispatch trick applied to ANN — compute scales
      with Q·nprobe·cap, NOT Q·N: partition pruning materializes as real FLOP
      savings under static shapes);
-  4. per local partition: fused L2+top-k scan (repro.kernels.l2_topk on TPU;
-     jnp path under lax.map on CPU);
+  4. per local partition: L2+top-k scan (portable jnp path under lax.map;
+     repro.kernels.l2_topk is the fused TPU kernel for this stage — wiring it
+     in on a real TPU backend is an open ROADMAP item). With cfg.quantized
+     the scan is two-stage:
+     per-query ADC LUT (computed once) → PQ-code shortlist of r·k candidates
+     (portable jnp gather path; wiring the fused kernels.pq_adc_topk in on a
+     real TPU backend is an open ROADMAP item) → exact f32 rerank of the
+     shortlist only, cutting the dominant vector-read traffic 8–32×
+     (serving/quantized.py);
   5. scatter back per query, local top-k, all-gather(k·shards) over "model",
      final merge. Collective volume is O(Q·k), independent of N.
 
@@ -38,7 +45,17 @@ from repro.kernels import ops as kops
 from repro.models.api import ModelBundle, StepDef, adamw_state_pspecs, adamw_state_specs, sds
 from repro.train import optimizer as opt
 
+from repro.serving import quantized as quantized_tier
 from repro.utils.compat import shard_map
+
+
+def batch_mesh_info(mesh):
+    """(batch_axes, bspec, bprod) for the query-batch axes of a mesh — the
+    single source for how serve steps and batch bucketing split queries."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    bprod = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
+    return batch_axes, bspec, bprod
 
 
 def probing_param_specs(cfg: LiraSystemConfig):
@@ -50,37 +67,48 @@ def probing_param_specs(cfg: LiraSystemConfig):
 
 def store_specs(cfg: LiraSystemConfig):
     b, c, d = cfg.n_partitions, cfg.capacity, cfg.dim
-    return {
+    specs = {
         "centroids": sds((b, d)),
         "vectors": sds((b, c, d), jnp.dtype(getattr(cfg, "store_dtype", "float32"))),
         "ids": sds((b, c), jnp.int32),
     }
+    if getattr(cfg, "quantized", False):
+        from repro.core.pq import code_dtype
+
+        specs["codes"] = sds((b, c, cfg.pq_m), jnp.dtype(code_dtype(cfg.pq_ks)))
+        specs["codebooks"] = sds((cfg.pq_m, cfg.pq_ks, d // cfg.pq_m))
+    return specs
 
 
-def store_pspecs(mesh):
-    return {
+def store_pspecs(mesh, cfg: LiraSystemConfig | None = None):
+    sp = {
         "centroids": P(None, None),
         "vectors": P("model", None, None),
         "ids": P("model", None),
     }
+    if cfg is not None and getattr(cfg, "quantized", False):
+        sp["codes"] = P("model", None, None)   # codes shard with their vectors
+        sp["codebooks"] = P(None, None, None)  # replicated like centroids
+    return sp
 
 
 # ------------------------------------------------------------- serve step
 
 def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float = 0.5,
-                    use_kernel: bool = False, q_cap_factor: float | None = None):
-    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+                    q_cap_factor: float | None = None,
+                    quantized: bool | None = None):
+    _, bspec, bprod = batch_mesh_info(mesh)
     model_n = mesh.shape.get("model", 1)
-    bprod = int(np.prod([mesh.shape[a] for a in batch_axes])) if batch_axes else 1
     q_row = n_queries // bprod
     b_loc = cfg.n_partitions // model_n
     q_cap_factor = q_cap_factor if q_cap_factor is not None else getattr(cfg, "q_cap_factor", 2.0)
     q_cap = max(8, int(q_row * cfg.nprobe_max / cfg.n_partitions * q_cap_factor))
     k = cfg.k
+    quantized = getattr(cfg, "quantized", False) if quantized is None else quantized
 
-    def f(q_loc, params, cents, vecs_loc, ids_loc):
+    def f(q_loc, params, cents, vecs_loc, ids_loc, *qargs):
         # q_loc: [q_row, d]; vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
+        # qargs (quantized only): codes_loc [b_loc, cap, m], codebooks [m, ks, d_sub]
         cd = (
             jnp.sum(q_loc * q_loc, -1, keepdims=True)
             - 2.0 * q_loc @ cents.T
@@ -107,25 +135,61 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         qbuf = jnp.full((b_loc, q_cap), q_row, jnp.int32).at[row, col].set(
             flat_q[order], mode="drop")                              # q_row = invalid
 
-        # ---- per-partition fused scan (l2 + top-k)
+        # ---- per-partition scan (f32: fused l2+top-k; quantized: two-stage)
         q_pad = jnp.concatenate([q_loc, jnp.full((1, q_loc.shape[1]), 1e9, q_loc.dtype)], 0)
 
-        def scan_partition(args):
-            qi, vec_b, id_b = args                                   # [q_cap], [cap, d], [cap]
-            qs = q_pad[qi].astype(vec_b.dtype)                       # [q_cap, d]
-            # bf16 operands + f32 accumulation (store_dtype=bfloat16 halves
-            # the dominant vector-read traffic; exact rerank happens at f32)
-            d2 = (
-                jnp.sum(qs.astype(jnp.float32) ** 2, -1, keepdims=True)
-                - 2.0 * jax.lax.dot_general(qs, vec_b, (((1,), (1,)), ((), ())),
-                                            preferred_element_type=jnp.float32)
-                + jnp.sum(vec_b.astype(jnp.float32) ** 2, -1)[None, :]
-            )
-            d2 = jnp.where(id_b[None, :] < 0, jnp.inf, d2)
-            neg, posk = jax.lax.top_k(-d2, k)
-            return -neg, id_b[posk]                                  # [q_cap, k] ×2
+        if quantized:
+            codes_loc, codebooks = qargs
+            m = codes_loc.shape[-1]
+            cap = vecs_loc.shape[1]
+            rk = min(cap, max(k, int(getattr(cfg, "rerank", 4)) * k))
+            # stage 0: per-query ADC LUT, once — valid across all partitions
+            # because codebooks are non-residual (serving/quantized.py)
+            lut_pad = jnp.concatenate(
+                [quantized_tier.adc_lut(codebooks, q_loc),
+                 jnp.zeros((1, m, codebooks.shape[1]), jnp.float32)], 0)
+            m_idx = jnp.arange(m)[:, None]
 
-        dists, rids = jax.lax.map(scan_partition, (qbuf, vecs_loc, ids_loc))  # [b_loc, q_cap, k]
+            def scan_partition(args):
+                qi, codes_b, vec_b, id_b = args    # [q_cap], [cap, m], [cap, d], [cap]
+                # stage 1: ADC shortlist over uint8 codes (TPU: pq_adc_topk
+                # fuses this scan; the gather path runs on every backend)
+                lq = lut_pad[qi]                                     # [q_cap, m, ks]
+                ad = lq[:, m_idx, codes_b.astype(jnp.int32).T].sum(1)  # [q_cap, cap]
+                ad = jnp.where(id_b[None, :] < 0, jnp.inf, ad)
+                _, sl = jax.lax.top_k(-ad, rk)                       # shortlist slots
+                # stage 2: exact f32 rerank on the shortlist only
+                qs = q_pad[qi].astype(jnp.float32)
+                cand = vec_b[sl].astype(jnp.float32)                 # [q_cap, rk, d]
+                cid = id_b[sl]
+                d2 = (
+                    jnp.sum(qs * qs, -1)[:, None]
+                    - 2.0 * jnp.einsum("qd,qrd->qr", qs, cand)
+                    + jnp.sum(cand * cand, -1)
+                )
+                d2 = jnp.where(cid < 0, jnp.inf, d2)
+                neg, posk = jax.lax.top_k(-d2, k)
+                return -neg, jnp.take_along_axis(cid, posk, axis=1)  # [q_cap, k] ×2
+
+            dists, rids = jax.lax.map(
+                scan_partition, (qbuf, codes_loc, vecs_loc, ids_loc))  # [b_loc, q_cap, k]
+        else:
+            def scan_partition(args):
+                qi, vec_b, id_b = args                               # [q_cap], [cap, d], [cap]
+                qs = q_pad[qi].astype(vec_b.dtype)                   # [q_cap, d]
+                # bf16 operands + f32 accumulation (store_dtype=bfloat16 halves
+                # the dominant vector-read traffic; exact rerank happens at f32)
+                d2 = (
+                    jnp.sum(qs.astype(jnp.float32) ** 2, -1, keepdims=True)
+                    - 2.0 * jax.lax.dot_general(qs, vec_b, (((1,), (1,)), ((), ())),
+                                                preferred_element_type=jnp.float32)
+                    + jnp.sum(vec_b.astype(jnp.float32) ** 2, -1)[None, :]
+                )
+                d2 = jnp.where(id_b[None, :] < 0, jnp.inf, d2)
+                neg, posk = jax.lax.top_k(-d2, k)
+                return -neg, id_b[posk]                              # [q_cap, k] ×2
+
+            dists, rids = jax.lax.map(scan_partition, (qbuf, vecs_loc, ids_loc))  # [b_loc, q_cap, k]
 
         # ---- scatter back per query, local merge
         out_d = jnp.full((q_row + 1, b_loc, k), jnp.inf, jnp.float32)
@@ -150,15 +214,21 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         return loc_d, loc_i, nprobe_eff
 
     param_spec = jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg))
+    in_specs = (P(bspec, None), param_spec, P(None, None),
+                P("model", None, None), P("model", None))
+    if quantized:
+        in_specs = in_specs + (P("model", None, None), P(None, None, None))
 
     def serve_step(params, store, queries):
+        args = (queries, params, store["centroids"], store["vectors"], store["ids"])
+        if quantized:
+            args = args + (store["codes"], store["codebooks"])
         return shard_map(
             f, mesh=mesh,
-            in_specs=(P(bspec, None), param_spec, P(None, None),
-                      P("model", None, None), P("model", None)),
+            in_specs=in_specs,
             out_specs=(P(bspec, None), P(bspec, None), P(bspec)),
             check_vma=False,
-        )(queries, params, store["centroids"], store["vectors"], store["ids"])
+        )(*args)
 
     return serve_step
 
@@ -197,8 +267,7 @@ def make_probe_train_step(cfg: LiraSystemConfig, mesh, tx):
 # ------------------------------------------------------------- bundle
 
 def make_bundle(cfg: LiraSystemConfig, mesh) -> ModelBundle:
-    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    _, bspec, _ = batch_mesh_info(mesh)
     tx = opt.adamw(opt.cosine_schedule(1e-3, 50, 5000))
     pc = probing.ProbingConfig(dim=cfg.dim, n_partitions=cfg.n_partitions,
                                q_hidden=tuple(cfg.q_hidden), i_hidden=tuple(cfg.i_hidden),
@@ -215,7 +284,7 @@ def make_bundle(cfg: LiraSystemConfig, mesh) -> ModelBundle:
             return StepDef(
                 fn=fn,
                 input_specs={"store": store_specs(cfg), "queries": sds((nq, cfg.dim))},
-                input_pspecs={"store": store_pspecs(mesh), "queries": P(bspec, None)},
+                input_pspecs={"store": store_pspecs(mesh, cfg), "queries": P(bspec, None)},
                 out_pspecs=None,
             )
         if shape.kind == "lira_train":
@@ -251,18 +320,27 @@ def make_bundle(cfg: LiraSystemConfig, mesh) -> ModelBundle:
 @dataclasses.dataclass
 class LiraEngine:
     """End-to-end host-driven engine: build (k-means → train probe → redundancy
-    → store) then serve batches via the distributed serve_step."""
+    → store [→ PQ codes]) then serve batches via the distributed serve_step.
+
+    Jitted serve steps are cached per (padded batch size, σ, quantized): query
+    batches are padded to power-of-two buckets so repeated traffic of varying
+    size hits the jit cache instead of recompiling every call.
+    """
 
     cfg: LiraSystemConfig
     params: dict
     store: dict
     mesh: jax.sharding.Mesh
     sigma: float = 0.5
+    _serve_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                           compare=False)
 
     @classmethod
     def build(cls, mesh, x: np.ndarray, *, n_partitions: int, k: int = 100,
               eta: float = 0.03, train_frac: float = 0.5, epochs: int = 8,
-              nprobe_max: Optional[int] = None, seed: int = 0, log: bool = False):
+              nprobe_max: Optional[int] = None, seed: int = 0, log: bool = False,
+              quantized: bool = False, pq_m: Optional[int] = None,
+              pq_ks: int = 256, rerank: int = 4):
         from repro.core import build_store, ground_truth as gt, kmeans_fit
         from repro.core.redundancy import plan_redundancy, replica_rows
         from repro.core.train_probing import train_probing_model
@@ -286,18 +364,58 @@ class LiraEngine:
         plan = plan_redundancy(params, x, assign, cents, eta=eta)
         extra = replica_rows(plan, x, ids)
         store_h = build_store(x, ids, assign, cents, extra=extra)
-        cfg = LiraSystemConfig(
-            arch="lira", dim=x.shape[1], n_partitions=n_partitions,
-            capacity=store_h.capacity, k=k,
-            nprobe_max=nprobe_max or max(8, n_partitions // 8),
-        )
         store = {"centroids": store_h.centroids, "vectors": store_h.vectors,
                  "ids": store_h.ids}
+        dim = x.shape[1]
+        if quantized:
+            # largest divisor of dim ≤ 16 (subspaces must tile the dim exactly)
+            pq_m = pq_m or max(m for m in range(1, min(16, dim) + 1) if dim % m == 0)
+            qs = quantized_tier.build_quantized_store(
+                jax.random.fold_in(rng, 1), store_h.vectors, store_h.ids,
+                m=pq_m, ks=pq_ks)
+            store["codes"], store["codebooks"] = qs.codes, qs.codebooks
+            pq_ks = qs.ks  # may have been clamped for tiny stores
+        cfg = LiraSystemConfig(
+            arch="lira", dim=dim, n_partitions=n_partitions,
+            capacity=store_h.capacity, k=k,
+            nprobe_max=min(n_partitions, nprobe_max or max(8, n_partitions // 8)),
+            quantized=quantized, pq_m=pq_m or 16, pq_ks=pq_ks, rerank=rerank,
+        )
         return cls(cfg=cfg, params=params, store=store, mesh=mesh)
 
-    def search(self, queries: np.ndarray, sigma: Optional[float] = None):
+    def _batch_bucket(self, nq: int) -> int:
+        """Pad batch sizes to power-of-two buckets (≥8, rounded up to a
+        multiple of the batch-mesh product so shard_map can split the batch)
+        so the jitted serve step is reused across nearby batch sizes."""
+        _, _, bprod = batch_mesh_info(self.mesh)
+        bucket = max(8, 1 << max(0, nq - 1).bit_length())
+        return -(-bucket // bprod) * bprod
+
+    _SERVE_CACHE_MAX = 32  # σ sweeps must not accumulate compiled steps forever
+
+    def serve_fn(self, nq_pad: int, sigma: float, quantized: bool):
+        """The cached jitted serve step for one (bucket, σ, tier) key."""
+        key = (nq_pad, float(sigma), bool(quantized))
+        fn = self._serve_cache.pop(key, None)
+        if fn is None:
+            fn = jax.jit(make_serve_step(self.cfg, self.mesh, nq_pad,
+                                         sigma=float(sigma), quantized=quantized))
+        self._serve_cache[key] = fn  # re-insert: dict order doubles as LRU
+        while len(self._serve_cache) > self._SERVE_CACHE_MAX:
+            self._serve_cache.pop(next(iter(self._serve_cache)))
+        return fn
+
+    def search(self, queries: np.ndarray, sigma: Optional[float] = None,
+               quantized: Optional[bool] = None):
+        sigma = self.sigma if sigma is None else sigma
+        quantized = getattr(self.cfg, "quantized", False) if quantized is None else quantized
+        if quantized and "codes" not in self.store:
+            raise ValueError("engine has no quantized store; build with quantized=True")
         nq = queries.shape[0]
-        fn = make_serve_step(self.cfg, self.mesh, nq, sigma=sigma or self.sigma)
+        nq_pad = self._batch_bucket(nq)
+        fn = self.serve_fn(nq_pad, sigma, quantized)
+        qp = np.zeros((nq_pad, self.cfg.dim), np.float32)
+        qp[:nq] = queries
         with self.mesh:
-            d, i, npb = jax.jit(fn)(self.params, self.store, jnp.asarray(queries, jnp.float32))
-        return np.asarray(d), np.asarray(i), np.asarray(npb)
+            d, i, npb = fn(self.params, self.store, jnp.asarray(qp))
+        return np.asarray(d)[:nq], np.asarray(i)[:nq], np.asarray(npb)[:nq]

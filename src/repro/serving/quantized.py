@@ -1,0 +1,95 @@
+"""Quantized two-stage serving tier: PQ/ADC shortlist + exact f32 rerank.
+
+The serve step's in-partition scan is memory-bandwidth bound: the f32 path
+reads ``capacity · d · 4`` bytes per probed partition. This tier shrinks the
+scan store 8–32× by scanning uint8 PQ codes instead (the HARMONY / LANNS
+compressed-scan-then-rerank split):
+
+  stage 0 (per query, once):  ADC LUT  [m, ks] subspace distance table;
+  stage 1 (per probed partition): LUT scan over the partition's codes →
+          shortlist of ``r·k`` candidate slots (``kernels.pq_adc_topk`` fuses
+          this on TPU; the jnp gather path runs everywhere);
+  stage 2: exact f32 distances on the shortlist only → top-k, then the usual
+          replica-aware ``dedup_topk`` local + cross-shard merges.
+
+PQ here is NON-residual (codebooks trained on raw vectors), so one LUT per
+query is valid across every partition — the property that lets the LUT be
+computed once outside the partition loop. The full-precision store stays
+resident as the rerank operand and as the exact fallback/oracle path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pq as pqmod
+
+
+class QuantizedStore(NamedTuple):
+    """PQ codes per partition slot + the shared codebooks.
+
+    ``codes`` rows beyond a partition's fill are real encodings of the padding
+    sentinel vectors; they are masked at scan time by ``ids < 0`` exactly like
+    the f32 path, so no separate validity plane is needed.
+    """
+
+    codes: jax.Array      # [B, capacity, m] uint8 (ks ≤ 256) / uint16
+    codebooks: jax.Array  # [m, ks, d_sub] f32
+
+    @property
+    def ks(self) -> int:
+        return self.codebooks.shape[1]
+
+
+# per-query subspace distance tables [Q, m, ks] from raw codebook arrays (the
+# serve step holds codebooks as a plain array, not a PQCodebook)
+adc_lut = pqmod.adc_lut_raw
+
+
+def build_quantized_store(
+    rng: jax.Array,
+    vectors,              # [B, capacity, d] np/jax — the padded partition store
+    ids,                  # [B, capacity] int32, -1 = padding
+    *,
+    m: int = 16,
+    ks: int = 256,
+    train_n: int = 32768,
+    n_iters: int = 12,
+) -> QuantizedStore:
+    """Train PQ on a sample of the valid slots, encode every slot.
+
+    ``ks`` is clamped to the number of valid training rows so tiny stores
+    (tests, smoke configs) build without under-determined codebooks.
+    """
+    vec = np.asarray(vectors, np.float32)
+    idv = np.asarray(ids)
+    b, cap, d = vec.shape
+    assert d % m == 0, f"dim {d} not divisible by pq_m={m}"
+    flat = vec.reshape(-1, d)
+    rows = np.flatnonzero(idv.reshape(-1) >= 0)
+    ks = int(min(ks, max(2, len(rows) // 2)))
+    rng_sample, rng_train = jax.random.split(rng)
+    if len(rows) > train_n:
+        host = np.random.default_rng(int(jax.random.randint(rng_sample, (), 0, 2**31 - 1)))
+        rows = host.choice(rows, train_n, replace=False)
+    pq = pqmod.train_pq(rng_train, flat[rows], m=m, ks=ks, n_iters=n_iters)
+    codes = pqmod.encode(pq, flat)  # [B·cap, m] narrow integer dtype
+    return QuantizedStore(codes=jnp.asarray(codes.reshape(b, cap, m)),
+                          codebooks=pq.codebooks)
+
+
+def scan_store_bytes(store: dict) -> dict:
+    """Bytes each scan path reads per full pass over the store (the quantized
+    tier's raison d'être: this ratio is the bandwidth win)."""
+    vec = store["vectors"]
+    f32_bytes = vec.size * vec.dtype.itemsize
+    out = {"f32": int(f32_bytes)}
+    if "codes" in store:
+        codes = store["codes"]
+        q_bytes = codes.size * codes.dtype.itemsize
+        out["quantized"] = int(q_bytes)
+        out["ratio"] = f32_bytes / max(1, q_bytes)
+    return out

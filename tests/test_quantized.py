@@ -1,0 +1,188 @@
+"""Tests for the quantized two-stage serving tier (ISSUE 2): PQ code dtypes,
+kernel-vs-oracle ADC parity on uint8 codes, the fused LUT-shortlist kernel,
+end-to-end quantized recall vs the exact f32 path (incl. η>0 replica dedup),
+and the serve-step jit cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LiraSystemConfig
+from repro.core import build_store, pq as pqmod, probing
+from repro.core import ground_truth as gt
+from repro.core.redundancy import RedundancyPlan, replica_rows
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_test_mesh
+from repro.serving.engine import LiraEngine
+from repro.serving.quantized import build_quantized_store, scan_store_bytes
+
+
+# ----------------------------------------------------------- pq.py dtypes
+
+def test_encode_emits_narrow_dtype_and_decode_accepts_it():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(512, 16)).astype(np.float32)
+    pq = pqmod.train_pq(jax.random.PRNGKey(0), x, m=4, ks=32, n_iters=4)
+    codes = pqmod.encode(pq, x)
+    assert codes.dtype == np.uint8  # ks=32 ≤ 256
+    recon8 = pqmod.decode(pq, codes)
+    recon32 = pqmod.decode(pq, codes.astype(np.int32))
+    np.testing.assert_array_equal(recon8, recon32)
+    q = jnp.asarray(x[:8])
+    a8 = np.asarray(pqmod.adc_distances(pq, q, jnp.asarray(codes)))
+    a32 = np.asarray(pqmod.adc_distances(pq, q, jnp.asarray(codes.astype(np.int32))))
+    np.testing.assert_allclose(a8, a32, rtol=1e-6)
+
+
+def test_code_dtype_widths():
+    assert pqmod.code_dtype(256) == np.uint8
+    assert pqmod.code_dtype(257) == np.uint16
+    assert pqmod.code_dtype(1 << 17) == np.int32
+
+
+# ----------------------------------------------- kernel vs adc_distances oracle
+
+@pytest.mark.parametrize("qn,n,m,ks", [(8, 64, 4, 16), (13, 200, 8, 32), (3, 70, 2, 256)])
+def test_pq_adc_kernel_matches_adc_distances_on_uint8(qn, n, m, ks):
+    """End-to-end oracle parity: the Pallas kernel fed a real LUT over uint8
+    codes must reproduce core.pq.adc_distances (incl. unaligned Q/N, which
+    exercises the kernel's internal padding)."""
+    rng = np.random.default_rng(qn * n + m)
+    d = m * 8
+    x = rng.normal(size=(max(4 * ks, 256), d)).astype(np.float32)
+    pq = pqmod.train_pq(jax.random.PRNGKey(1), x, m=m, ks=ks, n_iters=3)
+    codes = pqmod.encode(pq, x[:n])
+    assert codes.dtype == np.uint8
+    q = jnp.asarray(rng.normal(size=(qn, d)).astype(np.float32))
+    lut = pqmod.adc_lut(pq, q)
+    want = np.asarray(pqmod.adc_distances(pq, q, jnp.asarray(codes)))
+    got = np.asarray(ops.pq_adc(lut, jnp.asarray(codes), impl="interpret", tq=8, tn=32))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("qn,n,m,ks,k", [(8, 64, 4, 16, 5), (5, 130, 8, 32, 16),
+                                         (12, 40, 2, 64, 50)])
+def test_pq_adc_topk_matches_ref(qn, n, m, ks, k):
+    """Fused LUT-shortlist kernel vs the jnp oracle, incl. -1 padded ids,
+    unaligned N, and k > N degenerate pools."""
+    rng = np.random.default_rng(qn + n + k)
+    lut = jnp.asarray(rng.normal(size=(qn, m, ks)).astype(np.float32) ** 2)
+    codes = jnp.asarray(rng.integers(0, ks, size=(n, m)).astype(np.uint8))
+    ids = np.arange(n, dtype=np.int32)
+    ids[rng.random(n) < 0.15] = -1
+    ids = jnp.asarray(ids)
+    d1, i1 = ops.pq_adc_topk(lut, codes, ids, k, impl="interpret", tq=8, tn=32)
+    d2, i2 = ref.pq_adc_topk_ref(lut, codes, ids, k)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
+    # ids must agree as sets per row wherever distances are finite (tie order free)
+    for r in range(qn):
+        fin = np.isfinite(np.asarray(d1)[r])
+        assert set(np.asarray(i1)[r][fin].tolist()) == set(np.asarray(i2)[r][fin].tolist())
+        assert (np.asarray(i1)[r][~fin] == -1).all()
+
+
+def test_pq_adc_topk_property_sweep():
+    """Hypothesis sweep: kernel == oracle for arbitrary shapes/paddings."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(qn=st.integers(1, 20), n=st.integers(1, 150), m=st.sampled_from([2, 4, 8]),
+           ks=st.sampled_from([8, 16, 32]), k=st.integers(1, 20),
+           seed=st.integers(0, 10**6))
+    def inner(qn, n, m, ks, k, seed):
+        rng = np.random.default_rng(seed)
+        lut = jnp.asarray(rng.normal(size=(qn, m, ks)).astype(np.float32))
+        codes = jnp.asarray(rng.integers(0, ks, size=(n, m)).astype(np.uint8))
+        ids = np.arange(n, dtype=np.int32)
+        ids[rng.random(n) < 0.2] = -1
+        ids = jnp.asarray(ids)
+        d1, i1 = ops.pq_adc_topk(lut, codes, ids, k, impl="interpret", tq=8, tn=16)
+        d2, i2 = ref.pq_adc_topk_ref(lut, codes, ids, k)
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-4, atol=1e-4)
+
+    inner()
+
+
+# ----------------------------------------------------------- end-to-end tier
+
+@pytest.fixture(scope="module")
+def smoke_engines():
+    """One engine over a clustered smoke dataset with η>0 replicas, serving
+    both tiers from the same store (codes ride next to the f32 vectors)."""
+    from repro.data import make_vector_dataset
+
+    ds = make_vector_dataset(n=3000, n_queries=64, dim=32, n_modes=24, seed=7)
+    eng = LiraEngine.build(make_test_mesh(), ds.base, n_partitions=8, k=10,
+                           eta=0.05, train_frac=0.4, epochs=3, nprobe_max=8,
+                           quantized=True, pq_m=8, pq_ks=256, rerank=8)
+    _, gti = gt.exact_knn(ds.queries, ds.base, 10)
+    return eng, ds, gti
+
+
+def test_quantized_recall_within_2pct_of_f32(smoke_engines):
+    from repro.core.metrics import recall_at_k
+
+    eng, ds, gti = smoke_engines
+    _, i_f, _ = eng.search(ds.queries, sigma=-1.0, quantized=False)
+    _, i_q, _ = eng.search(ds.queries, sigma=-1.0, quantized=True)
+    r_f, r_q = recall_at_k(i_f, gti, 10), recall_at_k(i_q, gti, 10)
+    assert r_f == pytest.approx(1.0, abs=1e-6)  # full probe f32 is exact
+    assert r_q >= r_f - 0.02, (r_q, r_f)
+
+
+def test_quantized_replica_dedup_no_duplicate_ids():
+    """η>0 built through the real redundancy machinery: the quantized tier's
+    merges must dedup replica ids exactly like the f32 path."""
+    b, dim, n, k = 4, 16, 512, 10
+    host = np.random.default_rng(0)
+    x = host.normal(size=(n, dim)).astype(np.float32)
+    assign = (np.arange(n) % b).astype(np.int32)
+    cents = np.stack([x[assign == p].mean(0) for p in range(b)]).astype(np.float32)
+    ids = np.arange(n, dtype=np.int32)
+    picked = np.sort(host.choice(n, n // 4, replace=False))
+    targets = ((assign[picked] + 1) % b).astype(np.int32)[:, None]
+    plan = RedundancyPlan(picked=picked, targets=targets,
+                          pred_nprobe=np.zeros(n, np.int32))
+    store_h = build_store(x, ids, assign, cents, extra=replica_rows(plan, x, ids))
+    qs = build_quantized_store(jax.random.PRNGKey(2), store_h.vectors, store_h.ids,
+                               m=4, ks=64)
+    cfg = LiraSystemConfig(arch="lira", dim=dim, n_partitions=b,
+                           capacity=store_h.capacity, k=k, nprobe_max=b,
+                           quantized=True, pq_m=4, pq_ks=qs.ks, rerank=8)
+    store = {"centroids": store_h.centroids, "vectors": store_h.vectors,
+             "ids": store_h.ids, "codes": qs.codes, "codebooks": qs.codebooks}
+    params = probing.init(jax.random.PRNGKey(0),
+                          probing.ProbingConfig(dim=dim, n_partitions=b))
+    eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=make_test_mesh(),
+                     sigma=-1.0)  # σ=-1: every replica pair is visited
+    q = host.normal(size=(16, dim)).astype(np.float32)
+    d, i, npb = eng.search(q)
+    assert (npb == b).all()
+    for r in range(len(q)):
+        row = i[r][i[r] >= 0].tolist()
+        assert len(row) == len(set(row)), f"query {r} returned duplicates: {row}"
+        dr = d[r][np.isfinite(d[r])]
+        assert (np.diff(dr) >= -1e-5).all()
+
+
+def test_quantized_store_bytes_at_least_8x_smaller(smoke_engines):
+    eng, _, _ = smoke_engines
+    sb = scan_store_bytes(eng.store)
+    assert sb["ratio"] >= 8.0, sb  # dim=32 f32 vs m=8 uint8 codes = 16×
+
+
+def test_search_jit_cache_buckets(smoke_engines):
+    """Repeated searches must reuse the cached jitted step: same bucket → one
+    cache entry; results are sliced back to the true batch size."""
+    eng, ds, _ = smoke_engines
+    eng._serve_cache.clear()
+    d5, i5, n5 = eng.search(ds.queries[:5], sigma=0.4)
+    d7, i7, n7 = eng.search(ds.queries[:7], sigma=0.4)
+    assert d5.shape == (5, 10) and d7.shape == (7, 10) and n7.shape == (7,)
+    assert len(eng._serve_cache) == 1  # 5 and 7 share the 8-bucket
+    eng.search(ds.queries[:20], sigma=0.4)
+    assert len(eng._serve_cache) == 2  # 32-bucket
+    # padded rows must not disturb real queries: prefix results identical
+    np.testing.assert_array_equal(i5, i7[:5])
+    np.testing.assert_allclose(d5, d7[:5], rtol=1e-6)
