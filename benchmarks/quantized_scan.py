@@ -1,18 +1,29 @@
-"""Quantized two-stage serving tier vs the exact f32 scan (ISSUE 2).
+"""Quantized two-stage serving tier vs the exact f32 scan (ISSUEs 2 + 3).
 
-Serves the sift-like smoke workload through the distributed engine twice —
-f32 fused scan vs PQ/ADC shortlist + exact rerank — on the SAME LIRA store
-(η>0 replicas included), and reports QPS, recall@10 and scan-store bytes.
+Part 1 (ISSUE 2): serves the sift-like smoke workload through the distributed
+engine twice — f32 fused scan vs PQ/ADC shortlist + exact rerank — on the
+SAME LIRA store (η>0 replicas included), and reports QPS, recall@10 and
+scan-store bytes.
+
+Part 2 (ISSUE 3): residual vs non-residual PQ at EQUAL code size (same
+pq_m/pq_ks, same partitions/probing model) on a clustered workload — the
+regime where non-residual codes spend their budget encoding centroids. The
+shortlist is deliberately shallow (rerank=4 vs the 32 the sift-like run
+needs) so stage-1 code quality, not the exact rerank, decides recall.
 
 Acceptance (enforced here; run.py turns a raise into a CI failure):
-  * quantized recall@10 within 2% of the f32 path,
-  * scan store ≥ 8× smaller.
+  * quantized recall@10 within 2% of the f32 path (sift-like, ISSUE 2),
+  * scan store ≥ 8× smaller (sift-like, ISSUE 2),
+  * residual recall@10 gap vs exact f32 ≤ the non-residual gap on the
+    clustered workload (ISSUE 3).
 QPS note: the CPU gather path understates the quantized tier — on TPU the
-ADC scan is a fused one-hot MXU contraction (kernels.pq_adc_topk) and the
-bandwidth ratio below is the expected speedup regime.
+ADC scan is a fused one-hot MXU contraction (kernels.pq_adc_topk, incl. the
+residual offset operands) and the bandwidth ratio below is the expected
+speedup regime.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -20,6 +31,7 @@ import jax
 from benchmarks import _harness as H
 from repro.configs.base import LiraSystemConfig
 from repro.core.metrics import recall_at_k
+from repro.data import make_vector_dataset
 from repro.launch.mesh import make_test_mesh
 from repro.serving.engine import LiraEngine
 from repro.serving.quantized import build_quantized_store, scan_store_bytes
@@ -90,3 +102,88 @@ def run(emit):
     if r_q < r_f - 0.02:
         raise AssertionError(
             f"quantized recall {r_q:.4f} more than 2% below f32 {r_f:.4f}")
+
+    _run_residual_compare(emit)
+
+
+# ------------------------------------------- residual vs non-residual (ISSUE 3)
+
+CL_N, CL_Q, CL_DIM, CL_B = 20_000, 256, 64, 16
+CL_M, CL_KS, CL_RERANK = 8, 64, 4
+CL_SEED, CL_ETA = 5, 0.03
+# every derived artifact (engines, GT) must key on the full dataset identity,
+# or a constant change silently pairs stale engines with rebuilt data
+_CL_DS_KEY = f"clustered_n{CL_N}_d{CL_DIM}_B{CL_B}_s{CL_SEED}"
+
+
+def _clustered_engines():
+    """One clustered index, three serving forms. The non-residual engine is
+    built end-to-end; the residual engine reuses its partitions, probing model
+    and (m, ks) with only the code semantics changed — equal code size by
+    construction."""
+    ds = H._cached(
+        f"ds_{_CL_DS_KEY}",
+        lambda: make_vector_dataset("clustered", n=CL_N, n_queries=CL_Q,
+                                    dim=CL_DIM, n_modes=CL_B, center_scale=8.0,
+                                    spread=0.5, boundary_frac=0.05,
+                                    noise_frac=0.0, seed=CL_SEED))
+
+    def build():
+        eng = LiraEngine.build(
+            make_test_mesh(), ds.base, n_partitions=CL_B, k=K, eta=CL_ETA,
+            train_frac=0.25, epochs=5, nprobe_max=CL_B, quantized=True,
+            pq_m=CL_M, pq_ks=CL_KS, rerank=CL_RERANK)
+        qs = build_quantized_store(
+            jax.random.PRNGKey(1), eng.store["vectors"], eng.store["ids"],
+            m=CL_M, ks=eng.cfg.pq_ks, residual=True,
+            centroids=eng.store["centroids"])
+        return eng.cfg, eng.params, eng.store, qs
+
+    cfg, params, store, qs = H._cached(
+        f"qres_{_CL_DS_KEY}_eta{CL_ETA}_k{K}_m{CL_M}_ks{CL_KS}", build)
+    cfg = dataclasses.replace(cfg, rerank=CL_RERANK)  # rerank is not in the key
+    eng_nr = LiraEngine(cfg=cfg, params=params, store=store,
+                        mesh=make_test_mesh())
+    store_r = {**store, "codes": qs.codes, "codebooks": qs.codebooks,
+               "cterm": qs.cterm}
+    eng_r = LiraEngine(cfg=dataclasses.replace(cfg, residual_pq=True),
+                       params=params, store=store_r, mesh=eng_nr.mesh)
+    return eng_nr, eng_r, ds
+
+
+def _run_residual_compare(emit):
+    import numpy as np
+
+    from repro.core import ground_truth as gt
+
+    eng_nr, eng_r, ds = _clustered_engines()
+    _, gti = H._cached(f"gt_{_CL_DS_KEY}_k{K}",
+                       lambda: gt.exact_knn(ds.queries, ds.base, K))
+    q = ds.queries
+
+    recalls, times = {}, {}
+    # probe-all σ: f32 is then exact, so each tier's gap is pure quantization
+    for name, eng, quantized in (("f32", eng_r, False),
+                                 ("nonres", eng_nr, True),
+                                 ("res", eng_r, True)):
+        _, ids, _ = eng.search(q, sigma=-1.0, quantized=quantized)  # warm jit
+        t0 = time.perf_counter()
+        eng.search(q, sigma=-1.0, quantized=quantized)
+        times[name] = time.perf_counter() - t0
+        recalls[name] = recall_at_k(np.asarray(ids), gti, K)
+
+    gap_nr = recalls["f32"] - recalls["nonres"]
+    gap_r = recalls["f32"] - recalls["res"]
+    sb_r = scan_store_bytes(eng_r.store)
+    for name in ("f32", "nonres", "res"):
+        emit(f"quantized_scan/clustered_{name}", times[name] * 1e6,
+             f"qps={CL_Q/times[name]:.0f};recall={recalls[name]:.4f}")
+    emit("quantized_scan/residual_summary", 0.0,
+         f"gap_res={gap_r:.4f};gap_nonres={gap_nr:.4f};m={CL_M};ks={CL_KS};"
+         f"rerank={CL_RERANK};bytes_ratio=x{sb_r['ratio']:.1f};"
+         f"target=gap_res<=gap_nonres")
+
+    if gap_r > gap_nr:
+        raise AssertionError(
+            f"residual recall gap {gap_r:.4f} exceeds non-residual gap "
+            f"{gap_nr:.4f} on the clustered workload at equal code size")

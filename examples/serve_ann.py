@@ -22,12 +22,12 @@ def main():
     t0 = time.time()
     engine = LiraEngine.build(mesh, ds.base, n_partitions=32, k=10, eta=0.05,
                               train_frac=0.4, epochs=5, nprobe_max=8,
-                              quantized=True, pq_m=16, rerank=16)
+                              quantized=True, pq_m=16, rerank=16, residual=True)
     from repro.serving import scan_store_bytes
 
     sb = scan_store_bytes(engine.store)
     print(f"  built in {time.time()-t0:.0f}s; capacity={engine.cfg.capacity}; "
-          f"quantized scan store x{sb['ratio']:.1f} smaller")
+          f"residual-PQ scan store x{sb['ratio']:.1f} smaller")
 
     from repro.core import ground_truth as gt
     from repro.core.metrics import recall_at_k
@@ -35,7 +35,8 @@ def main():
     _, gti = gt.exact_knn(ds.queries, ds.base, 10)
 
     # both tiers serve from the same engine: codes ride next to the f32 store
-    for tier, quantized in (("f32 exact scan", False), ("PQ/ADC + rerank", True)):
+    for tier, quantized in (("f32 exact scan", False),
+                            ("residual PQ/ADC + rerank", True)):
         engine.search(ds.queries, sigma=0.3, quantized=quantized)  # warm the jit cache
         t0 = time.time()
         dists, ids, nprobe = engine.search(ds.queries, sigma=0.3, quantized=quantized)

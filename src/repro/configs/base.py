@@ -147,6 +147,9 @@ class LiraSystemConfig:
     pq_m: int = 16                  # PQ subspaces (dim % pq_m == 0)
     pq_ks: int = 256                # codewords/subspace (≤ 256 → uint8 codes)
     rerank: int = 4                 # shortlist depth r: rerank r·k per partition
+    residual_pq: bool = False       # encode x − centroid (clustered-data win);
+                                    # adds a per-slot f32 cterm plane + per-
+                                    # (query, partition) offset to the scan
 
 
 LIRA_SHAPES: Sequence[ShapeSpec] = (

@@ -1,7 +1,8 @@
-"""lira-ann-q — the quantized two-stage serving tier of lira-ann: PQ/ADC
-shortlist over uint8 codes + exact f32 rerank (serving/quantized.py).
-Registered as its own arch id so registry-driven tooling (arch smoke tests,
-dry-run cells) exercises the quantized bundle path."""
+"""lira-ann-q — the quantized two-stage serving tier of lira-ann: residual-PQ
+ADC shortlist over uint8 codes (+ per-partition LUT offsets, core/pq.py) +
+exact f32 rerank (serving/quantized.py). Registered as its own arch id so
+registry-driven tooling (arch smoke tests, dry-run cells) exercises the
+quantized bundle path including the residual cterm store plane."""
 from repro.configs.lira_ann import (  # noqa: F401
     CONFIG_QUANTIZED as CONFIG,
     SHAPES,

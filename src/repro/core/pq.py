@@ -110,3 +110,43 @@ def adc_distances(pq: PQCodebook, q: jax.Array, codes: jax.Array) -> jax.Array:
         return jnp.sum(jnp.take_along_axis(lq, codes_t, axis=1), axis=0)  # [N]
 
     return jax.vmap(per_query)(lut)
+
+
+# --------------------------------------------------------------- residual PQ
+#
+# IVFPQ residual encoding (codes over x − centroid[assign(x)]) normally breaks
+# the one-LUT-per-query property: the LUT of q − c_b depends on the partition.
+# The exact distance to the reconstruction c_b + r̂ decomposes instead as
+#
+#   ‖q − (c_b + r̂)‖² =   Σ_m lut[q, m, code_m]     (shared across partitions)
+#                       + ‖c_b‖² − 2⟨q, c_b⟩        (per-(query, partition))
+#                       + 2⟨c_b, r̂⟩                 (per-slot, query-free)
+#
+# where lut is the ordinary ``adc_lut`` of the RESIDUAL codebooks evaluated at
+# the raw query q. The serving tier precomputes the third term at build time
+# (``residual_cross_terms``, stored next to the codes); for the second it
+# reuses the probing centroid-distance matrix already in the serve step
+# (off = cd − ‖q‖², the same quantity ``residual_query_offsets`` computes
+# standalone — the differential tests pin the two forms together). So a
+# residual stage-1 scan stays a single LUT gather plus two offset adds.
+# tests/test_residual_pq.py asserts this identity against exact L2 in fp32.
+
+
+def residual_query_offsets(centroids: jax.Array, q: jax.Array) -> jax.Array:
+    """off[q, b] = ‖c_b‖² − 2⟨q, c_b⟩ — the per-(query, partition) scalar of
+    the residual ADC identity above. Equals ‖q − c_b‖² − ‖q‖²."""
+    return jnp.sum(centroids * centroids, -1)[None, :] - 2.0 * q @ centroids.T
+
+
+def residual_cross_terms(pq: PQCodebook, centroids_per_row: np.ndarray,
+                         codes: np.ndarray, *, batch: int = 65536) -> np.ndarray:
+    """cterm[n] = 2⟨c_n, decode(codes_n)⟩ — the per-slot, query-free term of
+    the residual ADC identity; ``centroids_per_row`` is each row's assigned
+    partition centroid [N, d]. Precomputed once at store-build time."""
+    n = codes.shape[0]
+    out = np.empty((n,), np.float32)
+    for s in range(0, n, batch):
+        recon = decode(pq, codes[s : s + batch])
+        out[s : s + batch] = 2.0 * np.einsum(
+            "nd,nd->n", np.asarray(centroids_per_row[s : s + batch], np.float32), recon)
+    return out

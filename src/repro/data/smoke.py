@@ -75,6 +75,10 @@ def make_smoke_inputs(config, shape, mesh, seed: int = 0):
                 store["codebooks"] = jnp.asarray(host.normal(
                     0, 1, (config.pq_m, config.pq_ks, config.dim // config.pq_m),
                 ).astype(np.float32))
+                if getattr(config, "residual_pq", False):
+                    store["cterm"] = jnp.asarray(host.normal(
+                        0, 1, (config.n_partitions, config.capacity),
+                    ).astype(np.float32))
             return {"store": store,
                     "queries": jnp.asarray(host.normal(0, 1, (nq, config.dim)).astype(np.float32))}
         if shape.kind == "lira_train":

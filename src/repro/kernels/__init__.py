@@ -5,7 +5,9 @@
                   occurrence mask + top-k (redundancy dedup, paper §3.3)
   pq_adc        — PQ LUT scan as one-hot MXU contraction (IVFPQ)
   pq_adc_topk   — fused LUT scan + running top-k shortlist (quantized tier
-                  stage 1: the [Q, N] ADC tile never leaves VMEM)
+                  stage 1: the [Q, N] ADC tile never leaves VMEM); optional
+                  per-candidate/per-query offset operands carry the residual
+                  PQ correction terms (core/pq.py residual ADC identity)
   kmeans_assign — fused distance+argmin (index build at 50M+ points)
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), oracle in ref.py,

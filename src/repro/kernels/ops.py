@@ -75,15 +75,19 @@ def pq_adc(lut, codes, *, impl: str | None = None, tq: int = 128, tn: int = 128)
                        interpret=True if impl == "interpret" else None)
 
 
-def pq_adc_topk(lut, codes, cand_ids, k: int, *, impl: str | None = None,
-                tq: int = 128, tn: int = 128):
+def pq_adc_topk(lut, codes, cand_ids, k: int, *, cand_off=None, q_off=None,
+                impl: str | None = None, tq: int = 128, tn: int = 128):
     """Fused ADC scan + top-k shortlist: the quantized tier's stage 1.
     Returns ([Q, k] ascending dists inf-padded, [Q, k] ids -1-padded); the
-    kernel's NEG_BIG-initialized scratch handles k > N pools natively."""
+    kernel's NEG_BIG-initialized scratch handles k > N pools natively.
+    ``cand_off`` [N] / ``q_off`` [Q] are the residual-PQ offset terms
+    (core.pq residual identity): cand_off re-ranks, q_off shifts distances."""
     impl = impl or _default_impl()
     if impl == "ref":
-        return _ref.pq_adc_topk_ref(lut, codes, cand_ids, k)
-    return _adc.pq_adc_topk(lut, codes, cand_ids, k, tq=tq, tn=tn,
+        return _ref.pq_adc_topk_ref(lut, codes, cand_ids, k,
+                                    cand_off=cand_off, q_off=q_off)
+    return _adc.pq_adc_topk(lut, codes, cand_ids, k, cand_off=cand_off,
+                            q_off=q_off, tq=tq, tn=tn,
                             interpret=True if impl == "interpret" else None)
 
 

@@ -81,7 +81,8 @@ def pq_adc(
     return out[:qn, :n]
 
 
-def _pq_adc_topk_kernel(lut_ref, codes_ref, cid_ref, od_ref, oi_ref, run_d, run_i,
+def _pq_adc_topk_kernel(lut_ref, codes_ref, cid_ref, coff_ref, qoff_ref,
+                        od_ref, oi_ref, run_d, run_i,
                         *, k: int, ks: int, n_nblocks: int):
     nb = pl.program_id(1)
 
@@ -93,6 +94,8 @@ def _pq_adc_topk_kernel(lut_ref, codes_ref, cid_ref, od_ref, oi_ref, run_d, run_
     lut = lut_ref[...]        # [TQ, m, ks] f32
     codes = codes_ref[...]    # [TN, m] int32
     cid = cid_ref[...]        # [TN] int32, -1 = padding
+    coff = coff_ref[...]      # [TN] f32 per-candidate offset (residual cterm)
+    qoff = qoff_ref[...]      # [TQ] f32 per-query offset (residual ‖c‖²−2qc)
     onehot = jax.nn.one_hot(codes, ks, dtype=lut.dtype)
     d = jax.lax.dot_general(
         lut.reshape(lut.shape[0], -1),
@@ -100,6 +103,7 @@ def _pq_adc_topk_kernel(lut_ref, codes_ref, cid_ref, od_ref, oi_ref, run_d, run_
         (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # [TQ, TN]
+    d = d + qoff[:, None] + coff[None, :]
     negd = jnp.where(cid[None, :] < 0, NEG_BIG, -d)
     merged_d = jnp.concatenate([run_d[...], negd], axis=1)               # [TQ, k+TN]
     merged_i = jnp.concatenate(
@@ -122,11 +126,18 @@ def pq_adc_topk(
     cand_ids: jax.Array,  # [N] int32, -1 = padding
     k: int,
     *,
+    cand_off: jax.Array | None = None,  # [N] f32 added per candidate
+    q_off: jax.Array | None = None,     # [Q] f32 added per query
     tq: int = 128,
     tn: int = 128,
     interpret: bool | None = None,
 ):
-    """Fused ADC scan + running top-k: ([Q, k] dists asc, [Q, k] ids)."""
+    """Fused ADC scan + running top-k: ([Q, k] dists asc, [Q, k] ids).
+
+    The optional offsets implement residual PQ (core.pq residual identity):
+    ``cand_off`` carries the per-slot cross term 2⟨c, r̂⟩ — it re-ranks the
+    shortlist — while ``q_off`` carries the per-query ‖c‖²−2⟨q, c⟩ scalar so
+    the returned distances equal exact L2 to the reconstruction."""
     qn, m, ks = lut.shape
     n = codes.shape[0]
     interpret = _detect_interpret(interpret)
@@ -135,6 +146,12 @@ def pq_adc_topk(
     lp = _pad_rows(lut, tq, 0.0)
     cp = _pad_rows(codes.astype(jnp.int32), tn, 0)
     ip = _pad_rows(cand_ids.astype(jnp.int32), tn, -1)
+    if cand_off is None:
+        cand_off = jnp.zeros((n,), jnp.float32)
+    if q_off is None:
+        q_off = jnp.zeros((qn,), jnp.float32)
+    cop = _pad_rows(cand_off.astype(jnp.float32), tn, 0.0)
+    qop = _pad_rows(q_off.astype(jnp.float32), tq, 0.0)
     n_nblocks = cp.shape[0] // tn
     kernel = functools.partial(_pq_adc_topk_kernel, k=k, ks=ks, n_nblocks=n_nblocks)
     od, oi = pl.pallas_call(
@@ -144,6 +161,8 @@ def pq_adc_topk(
             pl.BlockSpec((tq, m, ks), lambda i, j: (i, 0, 0)),
             pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
             pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((tq,), lambda i, j: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
@@ -158,5 +177,5 @@ def pq_adc_topk(
             pltpu.VMEM((tq, k), jnp.int32),
         ],
         interpret=interpret,
-    )(lp, cp, ip)
+    )(lp, cp, ip, cop, qop)
     return od[:qn], oi[:qn]

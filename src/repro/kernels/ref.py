@@ -30,9 +30,17 @@ def pq_adc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
     return jax.vmap(per_query)(lut.astype(jnp.float32))
 
 
-def pq_adc_topk_ref(lut: jax.Array, codes: jax.Array, cand_ids: jax.Array, k: int):
-    """Fused ADC + top-k oracle: ([Q,k] asc dists inf-padded, [Q,k] ids -1-padded)."""
+def pq_adc_topk_ref(lut: jax.Array, codes: jax.Array, cand_ids: jax.Array, k: int,
+                    cand_off: jax.Array | None = None,
+                    q_off: jax.Array | None = None):
+    """Fused ADC + top-k oracle: ([Q,k] asc dists inf-padded, [Q,k] ids -1-padded).
+    Optional residual-PQ offsets (see core.pq): ``cand_off`` [N] adds the
+    per-slot cross term, ``q_off`` [Q] the per-query partition scalar."""
     d = pq_adc_ref(lut, codes)
+    if cand_off is not None:
+        d = d + cand_off.astype(jnp.float32)[None, :]
+    if q_off is not None:
+        d = d + q_off.astype(jnp.float32)[:, None]
     ids = cand_ids.astype(jnp.int32)
     d = jnp.where(ids[None, :] < 0, jnp.inf, d)
     if d.shape[1] < k:  # degenerate pools: pad so top_k is well-defined

@@ -28,19 +28,25 @@ def main():
                     help="serve through the PQ/ADC shortlist + exact-rerank tier")
     ap.add_argument("--rerank", type=int, default=8,
                     help="quantized shortlist depth r (rerank r·k per partition)")
+    ap.add_argument("--residual", action="store_true",
+                    help="residual PQ: encode x − centroid with per-partition "
+                         "LUT offsets (implies --quantized)")
     args = ap.parse_args()
+    args.quantized = args.quantized or args.residual
 
     ds = make_vector_dataset(n=args.n, n_queries=args.queries, dim=64, n_modes=64, seed=4)
     mesh = make_test_mesh()
     print("building index…")
     engine = LiraEngine.build(mesh, ds.base, n_partitions=args.partitions, k=10,
                               eta=0.05, train_frac=0.4, epochs=5,
-                              quantized=args.quantized, rerank=args.rerank)
+                              quantized=args.quantized, rerank=args.rerank,
+                              residual=args.residual)
     if args.quantized:
         from repro.serving import scan_store_bytes
 
         sb = scan_store_bytes(engine.store)
-        print(f"  quantized tier: m={engine.cfg.pq_m} ks={engine.cfg.pq_ks} "
+        mode = "residual" if args.residual else "non-residual"
+        print(f"  quantized tier ({mode}): m={engine.cfg.pq_m} ks={engine.cfg.pq_ks} "
               f"rerank={engine.cfg.rerank}; scan store x{sb['ratio']:.1f} smaller")
 
     print(f"serving {args.queries} queries…")

@@ -20,7 +20,10 @@ serve_step:
      (portable jnp gather path; wiring the fused kernels.pq_adc_topk in on a
      real TPU backend is an open ROADMAP item) → exact f32 rerank of the
      shortlist only, cutting the dominant vector-read traffic 8–32×
-     (serving/quantized.py);
+     (serving/quantized.py). With cfg.residual_pq the codes encode
+     x − centroid and the scan adds the two scalar corrections of the
+     residual ADC identity (core/pq.py): a precomputed per-slot cterm plane
+     plus a per-(query, partition) offset derived from the probing cd matrix;
   5. scatter back per query, local top-k, all-gather(k·shards) over "model",
      final merge. Collective volume is O(Q·k), independent of N.
 
@@ -77,6 +80,8 @@ def store_specs(cfg: LiraSystemConfig):
 
         specs["codes"] = sds((b, c, cfg.pq_m), jnp.dtype(code_dtype(cfg.pq_ks)))
         specs["codebooks"] = sds((cfg.pq_m, cfg.pq_ks, d // cfg.pq_m))
+        if getattr(cfg, "residual_pq", False):
+            specs["cterm"] = sds((b, c))  # per-slot residual cross terms
     return specs
 
 
@@ -89,6 +94,8 @@ def store_pspecs(mesh, cfg: LiraSystemConfig | None = None):
     if cfg is not None and getattr(cfg, "quantized", False):
         sp["codes"] = P("model", None, None)   # codes shard with their vectors
         sp["codebooks"] = P(None, None, None)  # replicated like centroids
+        if getattr(cfg, "residual_pq", False):
+            sp["cterm"] = P("model", None)     # rides with its codes
     return sp
 
 
@@ -105,10 +112,12 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
     q_cap = max(8, int(q_row * cfg.nprobe_max / cfg.n_partitions * q_cap_factor))
     k = cfg.k
     quantized = getattr(cfg, "quantized", False) if quantized is None else quantized
+    residual = quantized and getattr(cfg, "residual_pq", False)
 
     def f(q_loc, params, cents, vecs_loc, ids_loc, *qargs):
         # q_loc: [q_row, d]; vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
-        # qargs (quantized only): codes_loc [b_loc, cap, m], codebooks [m, ks, d_sub]
+        # qargs (quantized only): codes_loc [b_loc, cap, m], codebooks
+        # [m, ks, d_sub] (+ cterm_loc [b_loc, cap] in residual mode)
         cd = (
             jnp.sum(q_loc * q_loc, -1, keepdims=True)
             - 2.0 * q_loc @ cents.T
@@ -139,23 +148,44 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         q_pad = jnp.concatenate([q_loc, jnp.full((1, q_loc.shape[1]), 1e9, q_loc.dtype)], 0)
 
         if quantized:
-            codes_loc, codebooks = qargs
+            if residual:
+                codes_loc, codebooks, cterm_loc = qargs
+            else:
+                codes_loc, codebooks = qargs
             m = codes_loc.shape[-1]
             cap = vecs_loc.shape[1]
             rk = min(cap, max(k, int(getattr(cfg, "rerank", 4)) * k))
-            # stage 0: per-query ADC LUT, once — valid across all partitions
-            # because codebooks are non-residual (serving/quantized.py)
+            # stage 0: per-query ADC LUT, once — valid across all partitions.
+            # Non-residual codebooks make this exact; residual codebooks make
+            # it exact up to the two scalar corrections of the residual ADC
+            # identity (core/pq.py), added below inside the scan.
             lut_pad = jnp.concatenate(
                 [quantized_tier.adc_lut(codebooks, q_loc),
                  jnp.zeros((1, m, codebooks.shape[1]), jnp.float32)], 0)
             m_idx = jnp.arange(m)[:, None]
+            if residual:
+                # ‖c_b‖² − 2⟨q, c_b⟩ = cd − ‖q‖², per (query, partition); the
+                # centroid-distance matrix cd is already here for probing.
+                off = cd - jnp.sum(q_loc * q_loc, -1, keepdims=True)   # [q_row, B]
+                off_pad = jnp.concatenate(
+                    [off, jnp.zeros((1, off.shape[1]), off.dtype)], 0)
+                off_loc = jax.lax.dynamic_slice_in_dim(
+                    off_pad, b0, b_loc, axis=1).T                      # [b_loc, q_row+1]
 
             def scan_partition(args):
-                qi, codes_b, vec_b, id_b = args    # [q_cap], [cap, m], [cap, d], [cap]
+                if residual:
+                    qi, codes_b, vec_b, id_b, ct_b, off_b = args
+                else:
+                    qi, codes_b, vec_b, id_b = args    # [q_cap], [cap, m], [cap, d], [cap]
                 # stage 1: ADC shortlist over uint8 codes (TPU: pq_adc_topk
-                # fuses this scan; the gather path runs on every backend)
+                # fuses this scan incl. the offset operands; the gather path
+                # runs on every backend)
                 lq = lut_pad[qi]                                     # [q_cap, m, ks]
                 ad = lq[:, m_idx, codes_b.astype(jnp.int32).T].sum(1)  # [q_cap, cap]
+                if residual:
+                    # cross term re-ranks the shortlist; the per-(q, b) scalar
+                    # makes ad the exact L2 to each slot's reconstruction
+                    ad = ad + ct_b[None, :] + off_b[qi][:, None]
                 ad = jnp.where(id_b[None, :] < 0, jnp.inf, ad)
                 _, sl = jax.lax.top_k(-ad, rk)                       # shortlist slots
                 # stage 2: exact f32 rerank on the shortlist only
@@ -171,8 +201,10 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
                 neg, posk = jax.lax.top_k(-d2, k)
                 return -neg, jnp.take_along_axis(cid, posk, axis=1)  # [q_cap, k] ×2
 
-            dists, rids = jax.lax.map(
-                scan_partition, (qbuf, codes_loc, vecs_loc, ids_loc))  # [b_loc, q_cap, k]
+            scan_args = (qbuf, codes_loc, vecs_loc, ids_loc)
+            if residual:
+                scan_args = scan_args + (cterm_loc, off_loc)
+            dists, rids = jax.lax.map(scan_partition, scan_args)     # [b_loc, q_cap, k]
         else:
             def scan_partition(args):
                 qi, vec_b, id_b = args                               # [q_cap], [cap, d], [cap]
@@ -218,11 +250,15 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
                 P("model", None, None), P("model", None))
     if quantized:
         in_specs = in_specs + (P("model", None, None), P(None, None, None))
+        if residual:
+            in_specs = in_specs + (P("model", None),)
 
     def serve_step(params, store, queries):
         args = (queries, params, store["centroids"], store["vectors"], store["ids"])
         if quantized:
             args = args + (store["codes"], store["codebooks"])
+            if residual:
+                args = args + (store["cterm"],)
         return shard_map(
             f, mesh=mesh,
             in_specs=in_specs,
@@ -340,11 +376,12 @@ class LiraEngine:
               eta: float = 0.03, train_frac: float = 0.5, epochs: int = 8,
               nprobe_max: Optional[int] = None, seed: int = 0, log: bool = False,
               quantized: bool = False, pq_m: Optional[int] = None,
-              pq_ks: int = 256, rerank: int = 4):
+              pq_ks: int = 256, rerank: int = 4, residual: bool = False):
         from repro.core import build_store, ground_truth as gt, kmeans_fit
         from repro.core.redundancy import plan_redundancy, replica_rows
         from repro.core.train_probing import train_probing_model
 
+        quantized = quantized or residual  # residual is a mode OF the PQ tier
         rng = jax.random.PRNGKey(seed)
         host = np.random.default_rng(seed)
         st = kmeans_fit(rng, jnp.asarray(x), n_clusters=n_partitions, n_iters=20)
@@ -372,14 +409,18 @@ class LiraEngine:
             pq_m = pq_m or max(m for m in range(1, min(16, dim) + 1) if dim % m == 0)
             qs = quantized_tier.build_quantized_store(
                 jax.random.fold_in(rng, 1), store_h.vectors, store_h.ids,
-                m=pq_m, ks=pq_ks)
+                m=pq_m, ks=pq_ks, residual=residual,
+                centroids=store_h.centroids if residual else None)
             store["codes"], store["codebooks"] = qs.codes, qs.codebooks
+            if residual:
+                store["cterm"] = qs.cterm
             pq_ks = qs.ks  # may have been clamped for tiny stores
         cfg = LiraSystemConfig(
             arch="lira", dim=dim, n_partitions=n_partitions,
             capacity=store_h.capacity, k=k,
             nprobe_max=min(n_partitions, nprobe_max or max(8, n_partitions // 8)),
             quantized=quantized, pq_m=pq_m or 16, pq_ks=pq_ks, rerank=rerank,
+            residual_pq=quantized and residual,
         )
         return cls(cfg=cfg, params=params, store=store, mesh=mesh)
 
