@@ -78,7 +78,7 @@ def run(emit):
     results = {}
     for tier in ("f32", "adc"):
         quantized = tier == "adc"
-        _, ids, _ = eng.search(q, sigma=SIGMA, quantized=quantized)  # warm jit
+        _, ids, _, _ = eng.search(q, sigma=SIGMA, quantized=quantized)  # warm jit
         t0 = time.perf_counter()
         reps = 3
         for _ in range(reps):
@@ -166,7 +166,7 @@ def _run_residual_compare(emit):
     for name, eng, quantized in (("f32", eng_r, False),
                                  ("nonres", eng_nr, True),
                                  ("res", eng_r, True)):
-        _, ids, _ = eng.search(q, sigma=-1.0, quantized=quantized)  # warm jit
+        _, ids, _, _ = eng.search(q, sigma=-1.0, quantized=quantized)  # warm jit
         t0 = time.perf_counter()
         eng.search(q, sigma=-1.0, quantized=quantized)
         times[name] = time.perf_counter() - t0

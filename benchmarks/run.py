@@ -13,6 +13,7 @@ import time
 SUITES = [
     ("eval_merge", "benchmarks.eval_merge"),
     ("quantized_scan", "benchmarks.quantized_scan"),
+    ("scan_paths", "benchmarks.scan_paths"),
     ("fig2", "benchmarks.fig2_motivation"),
     ("fig11", "benchmarks.fig11_convergence"),
     ("table1", "benchmarks.table1_vary_k"),

@@ -1,0 +1,104 @@
+"""Partition-scan backend comparison + parity gate (ISSUE 4).
+
+Serves one η>0 LIRA store through the distributed engine with the two CPU-
+runnable scan backends of serving/scan.py — ``ref`` (portable jnp) and
+``interpret`` (the grid-batched Pallas kernels through the interpreter) — on
+all three tiers (f32, quantized, residual), reporting latency per path and
+ASSERTING parity: bit-identical distances, set-identical ids, identical
+nprobe/overflow counters.
+
+This is the CI tripwire for kernel/oracle drift in the scan layer, exactly
+like the PR 3 coverage floor: run.py turns any raise into a bench-smoke
+failure. Latency note: on CPU the interpreter is expected to lose to the jnp
+path — the row exists to track the gap, not to win it; on TPU ``pallas``
+compiles natively and the kernels are the fast path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import _harness as H
+from repro.data import make_vector_dataset
+from repro.launch.mesh import make_test_mesh
+from repro.serving.engine import LiraEngine
+from repro.serving.quantized import build_quantized_store
+
+N, NQ, DIM, B, K = 10_000, 128, 64, 16, 10
+ETA, SIGMA, SEED = 0.03, 0.3, 6
+PQ_M, PQ_KS, RERANK = 8, 64, 8
+NPROBE, TRAIN_FRAC, EPOCHS = 8, 0.3, 4
+# cached artifacts bake in the full cfg/params/store, so the key must cover
+# every build parameter — a constant edit must miss the stale pickle (same
+# convention as quantized_scan's cache keys)
+_DS_KEY = (f"scanpaths_n{N}_d{DIM}_B{B}_s{SEED}_eta{ETA}_m{PQ_M}_ks{PQ_KS}"
+           f"_k{K}_r{RERANK}_np{NPROBE}_tf{TRAIN_FRAC}_e{EPOCHS}")
+
+
+def _engines():
+    ds = H._cached(
+        f"ds_{_DS_KEY}",
+        lambda: make_vector_dataset("sift-like", n=N, n_queries=NQ, dim=DIM,
+                                    n_modes=B * 2, seed=SEED))
+
+    def build():
+        eng = LiraEngine.build(
+            make_test_mesh(), ds.base, n_partitions=B, k=K, eta=ETA,
+            train_frac=TRAIN_FRAC, epochs=EPOCHS, nprobe_max=NPROBE,
+            quantized=True, pq_m=PQ_M, pq_ks=PQ_KS, rerank=RERANK)
+        qs = build_quantized_store(
+            jax.random.PRNGKey(1), eng.store["vectors"], eng.store["ids"],
+            m=PQ_M, ks=eng.cfg.pq_ks, residual=True,
+            centroids=eng.store["centroids"])
+        return eng.cfg, eng.params, eng.store, qs
+
+    cfg, params, store, qs = H._cached(f"eng_{_DS_KEY}", build)
+    eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=make_test_mesh())
+    store_r = {**store, "codes": qs.codes, "codebooks": qs.codebooks,
+               "cterm": qs.cterm}
+    eng_r = LiraEngine(cfg=dataclasses.replace(cfg, residual_pq=True),
+                       params=params, store=store_r, mesh=eng.mesh)
+    return eng, eng_r, ds
+
+
+def run(emit):
+    eng, eng_r, ds = _engines()
+    q = ds.queries[:NQ]
+    mismatches = []
+    for tier, engine, quantized in (("f32", eng, False),
+                                    ("quantized", eng, True),
+                                    ("residual", eng_r, True)):
+        results = {}
+        for impl in ("ref", "interpret"):
+            engine.search(q, sigma=SIGMA, quantized=quantized, impl=impl)  # warm jit
+            t0 = time.perf_counter()
+            d, ids, npb, ovf = engine.search(q, sigma=SIGMA, quantized=quantized,
+                                             impl=impl)
+            dt = time.perf_counter() - t0
+            results[impl] = (dt, d, ids, npb, ovf)
+            emit(f"scan_paths/{tier}_{impl}", dt * 1e6,
+                 f"qps={NQ/dt:.0f};nprobe={npb.mean():.2f};overflow={ovf}")
+        (t_r, d_r, i_r, np_r, o_r), (t_k, d_k, i_k, np_k, o_k) = \
+            results["ref"], results["interpret"]
+        bit_d = np.array_equal(d_r, d_k)
+        same_i = all(
+            set(i_r[r][np.isfinite(d_r[r])].tolist())
+            == set(i_k[r][np.isfinite(d_k[r])].tolist())
+            for r in range(NQ))
+        same_ct = np.array_equal(np_r, np_k) and o_r == o_k
+        emit(f"scan_paths/{tier}_parity", 0.0,
+             f"dists_bit_identical={bit_d};ids_set_identical={same_i};"
+             f"counters_identical={same_ct};kernel_over_ref=x{t_k/t_r:.2f}")
+        if not (bit_d and same_i and same_ct):
+            mismatches.append(tier)
+    if mismatches:
+        raise AssertionError(
+            f"scan kernel/oracle drift on tier(s) {','.join(mismatches)}: "
+            "serving/scan.py impls disagree — see scan_paths/*_parity rows")
+
+
+if __name__ == "__main__":
+    run(lambda *a: print(*a))

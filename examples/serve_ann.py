@@ -39,10 +39,12 @@ def main():
                             ("residual PQ/ADC + rerank", True)):
         engine.search(ds.queries, sigma=0.3, quantized=quantized)  # warm the jit cache
         t0 = time.time()
-        dists, ids, nprobe = engine.search(ds.queries, sigma=0.3, quantized=quantized)
+        dists, ids, nprobe, overflow = engine.search(ds.queries, sigma=0.3,
+                                                     quantized=quantized)
         dt = time.time() - t0
         print(f"  [{tier}] {len(ds.queries)/dt:.0f} QPS (1-CPU container); "
-              f"mean nprobe={nprobe.mean():.2f}; recall@10={recall_at_k(ids, gti, 10):.3f}")
+              f"mean nprobe={nprobe.mean():.2f}; dropped probes={overflow}; "
+              f"recall@10={recall_at_k(ids, gti, 10):.3f}")
 
 
 if __name__ == "__main__":

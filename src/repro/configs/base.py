@@ -141,6 +141,10 @@ class LiraSystemConfig:
     dtype: str = "float32"
     store_dtype: str = "float32"    # vector storage (bfloat16 halves scan reads)
     q_cap_factor: float = 2.0       # query-dispatch slack (compute ∝ this)
+    impl: str = "auto"              # partition-scan backend (serving/scan.py):
+                                    # auto (pallas on TPU, ref elsewhere) | ref
+                                    # (portable jnp) | pallas (fused kernels) |
+                                    # interpret (kernels via the interpreter)
     # quantized two-stage tier (serving/quantized.py): PQ/ADC shortlist over
     # uint8 codes, exact f32 rerank of the r·k shortlist
     quantized: bool = False

@@ -83,9 +83,15 @@ def bce_loss(params, q, cent_dist, labels, *, pos_weight: float = 1.0):
 
 @functools.partial(jax.jit, static_argnames=("sigma",))
 def predict_probe_mask(params, q, cent_dist, sigma: float = 0.5):
-    """Partitions with p̂ > σ (query-adaptive nprobe). Returns (mask, probs)."""
+    """Partitions with p̂ > σ (query-adaptive nprobe). Returns (mask, probs).
+
+    The arg-max partition is always included: the serve step forces ≥1 probe
+    per query, and training-time nprobe/recall metrics must reflect serving
+    behavior (at high σ a threshold-only mask can go empty and understate
+    both)."""
     p = probs(params, q, cent_dist)
-    return p > sigma, p
+    best = jax.nn.one_hot(jnp.argmax(p, -1), p.shape[-1], dtype=bool)
+    return (p > sigma) | best, p
 
 
 def predicted_nprobe(params, q, cent_dist, sigma: float = 0.5) -> jax.Array:

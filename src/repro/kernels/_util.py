@@ -10,9 +10,17 @@ import jax.numpy as jnp
 NEG_BIG = -1e30
 
 
-def pad_rows(a: jax.Array, mult: int, fill) -> jax.Array:
-    """Pad axis 0 up to a multiple of ``mult`` with ``fill``."""
-    pad = (-a.shape[0]) % mult
+def pad_dim(a: jax.Array, axis: int, mult: int, fill) -> jax.Array:
+    """Pad ``axis`` up to a multiple of ``mult`` with ``fill`` (batched kernels
+    pad the per-bucket axes; axis 0 stays the bucket count)."""
+    pad = (-a.shape[axis]) % mult
     if pad == 0:
         return a
-    return jnp.concatenate([a, jnp.full((pad, *a.shape[1:]), fill, a.dtype)], axis=0)
+    shape = list(a.shape)
+    shape[axis] = pad
+    return jnp.concatenate([a, jnp.full(shape, fill, a.dtype)], axis=axis)
+
+
+def pad_rows(a: jax.Array, mult: int, fill) -> jax.Array:
+    """Pad axis 0 up to a multiple of ``mult`` with ``fill``."""
+    return pad_dim(a, 0, mult, fill)

@@ -58,8 +58,11 @@ def _l2_topk_kernel(q_ref, c_ref, cid_ref, od_ref, oi_ref, run_d, run_i, *, k: i
 
     @pl.when(cb == n_cblocks - 1)
     def _flush():
-        od_ref[...] = -run_d[...]   # back to positive squared distances
-        oi_ref[...] = run_i[...]
+        # back to positive squared distances; slots never filled by a valid
+        # candidate flush as inf/-1 exactly like the jnp oracle
+        invalid = run_d[...] <= NEG_BIG / 2
+        od_ref[...] = jnp.where(invalid, jnp.inf, -run_d[...])
+        oi_ref[...] = jnp.where(invalid, -1, run_i[...])
 
 
 @functools.partial(jax.jit, static_argnames=("k", "tq", "tc", "interpret"))
@@ -93,6 +96,85 @@ def l2_topk(
         out_shape=[
             jax.ShapeDtypeStruct((qn, k), jnp.float32),
             jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, cands, cand_ids)
+
+
+def _l2_topk_batched_kernel(q_ref, c_ref, cid_ref, od_ref, oi_ref, run_d, run_i,
+                            *, k: int, n_cblocks: int):
+    """One (bucket, q_tile, c_block) grid step — same running-top-k scheme as
+    the flat kernel; the scratch re-initializes per (bucket, q_tile) because the
+    c_block axis is innermost."""
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        run_d[...] = jnp.full_like(run_d, NEG_BIG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    q = q_ref[0].astype(jnp.float32)            # [TQ, d]
+    c = c_ref[0].astype(jnp.float32)            # [TC, d]
+    cid = cid_ref[0]                            # [TC] int32
+
+    d2 = (
+        2.0 * jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        - jnp.sum(q * q, axis=-1, keepdims=True)
+        - jnp.sum(c * c, axis=-1)[None, :]
+    )  # [TQ, TC] = -dist²
+    d2 = jnp.where(cid[None, :] < 0, NEG_BIG, d2)
+
+    merged_d = jnp.concatenate([run_d[...], d2], axis=1)
+    merged_i = jnp.concatenate([run_i[...], jnp.broadcast_to(cid[None, :], d2.shape)], axis=1)
+    top_d, pos = jax.lax.top_k(merged_d, k)
+    run_d[...] = top_d
+    run_i[...] = jnp.take_along_axis(merged_i, pos, axis=1)
+
+    @pl.when(cb == n_cblocks - 1)
+    def _flush():
+        invalid = run_d[...] <= NEG_BIG / 2
+        od_ref[0] = jnp.where(invalid, jnp.inf, -run_d[...])
+        oi_ref[0] = jnp.where(invalid, -1, run_i[...])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tq", "tc", "interpret"))
+def l2_topk_batched(
+    q: jax.Array,         # [B, Q, d] — Q multiple of tq
+    cands: jax.Array,     # [B, C, d] — C multiple of tc
+    cand_ids: jax.Array,  # [B, C] int32, -1 = padding
+    k: int,
+    *,
+    tq: int = 256,
+    tc: int = 256,
+    interpret: bool = True,
+):
+    """Grid-batched l2_topk: scans all B (query-bucket, candidate-set) pairs in
+    ONE pallas launch — the serve step's per-partition scan shape."""
+    bn, qn, d = q.shape
+    cn = cands.shape[1]
+    assert qn % tq == 0 and cn % tc == 0, (qn, tq, cn, tc)
+    n_cblocks = cn // tc
+    kernel = functools.partial(_l2_topk_batched_kernel, k=k, n_cblocks=n_cblocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(bn, qn // tq, n_cblocks),
+        in_specs=[
+            pl.BlockSpec((1, tq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tc, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tc), lambda b, i, j: (b, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, k), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tq, k), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bn, qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((bn, qn, k), jnp.int32),
         ],
         scratch_shapes=[
             pltpu.VMEM((tq, k), jnp.float32),

@@ -21,16 +21,18 @@ from repro.kernels import pq_adc as _adc
 from repro.kernels import kmeans_assign as _km
 
 
-from repro.kernels._util import pad_rows as _pad_rows
+from repro.kernels._util import pad_dim as _pad_dim, pad_rows as _pad_rows
 
 
-def _default_impl() -> str:
+def default_impl() -> str:
+    """One backend-selection policy for every dispatch layer (incl.
+    serving/scan.py): fused kernels on TPU, jnp reference elsewhere."""
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 def l2_topk(q, cands, cand_ids, k: int, *, impl: str | None = None, tq: int = 256, tc: int = 256):
     """Top-k nearest candidates per query. Handles arbitrary Q/C via padding."""
-    impl = impl or _default_impl()
+    impl = impl or default_impl()
     if impl == "ref":
         return _ref.l2_topk_ref(q, cands, cand_ids, k)
     interpret = impl == "interpret" or jax.default_backend() != "tpu"
@@ -41,13 +43,53 @@ def l2_topk(q, cands, cand_ids, k: int, *, impl: str | None = None, tq: int = 25
     ip = _pad_rows(cand_ids.astype(jnp.int32), tc, -1)
     k_eff = min(k, cp.shape[0])
     d, i = _l2.l2_topk(qp, cp, ip, k_eff, tq=tq_eff, tc=min(tc, cp.shape[0]), interpret=interpret)
-    return d[:qn, :k], i[:qn, :k]
+    d, i = d[:qn], i[:qn]
+    if k_eff < k:  # degenerate pools: inf/-1 fill matches the ref oracle
+        d = jnp.concatenate([d, jnp.full((qn, k - k_eff), jnp.inf, d.dtype)], axis=1)
+        i = jnp.concatenate([i, jnp.full((qn, k - k_eff), -1, i.dtype)], axis=1)
+    return d, i
+
+
+def l2_topk_batched(q, cands, cand_ids, k: int, *, impl: str | None = None,
+                    tq: int = 256, tc: int = 256):
+    """Grid-batched top-k scan: [B, Q, d] query buckets vs [B, C, d] candidate
+    sets → ([B, Q, k], [B, Q, k]) in one kernel launch (the serve step's
+    per-partition scan shape). Pads Q/C to tile multiples internally."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.l2_topk_batched_ref(q, cands, cand_ids, k)
+    interpret = impl == "interpret" or jax.default_backend() != "tpu"
+    _, qn, _ = q.shape
+    cn = cands.shape[1]
+    tq_eff = min(tq, max(8, qn))
+    tc_eff = min(tc, max(8, cn))
+    qp = _pad_dim(q, 1, tq_eff, 0.0)
+    cp = _pad_dim(cands, 1, tc_eff, 0.0)
+    ip = _pad_dim(cand_ids.astype(jnp.int32), 1, tc_eff, -1)
+    d, i = _l2.l2_topk_batched(qp, cp, ip, k, tq=tq_eff, tc=tc_eff,
+                               interpret=interpret)
+    return d[:, :qn], i[:, :qn]
+
+
+def pq_adc_topk_batched(lut, codes, cand_ids, k: int, *, cand_off=None,
+                        q_off=None, impl: str | None = None,
+                        tq: int = 128, tn: int = 128):
+    """Grid-batched fused ADC shortlist: [B, Q, m, ks] LUT buckets vs [B, N, m]
+    code sets → ([B, Q, k], [B, Q, k]) in one launch, threading the residual
+    ``cand_off`` [B, N] / ``q_off`` [B, Q] offset operands."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.pq_adc_topk_batched_ref(lut, codes, cand_ids, k,
+                                            cand_off=cand_off, q_off=q_off)
+    return _adc.pq_adc_topk_batched(lut, codes, cand_ids, k, cand_off=cand_off,
+                                    q_off=q_off, tq=tq, tn=tn,
+                                    interpret=True if impl == "interpret" else None)
 
 
 def dedup_topk(dists, ids, k: int, *, impl: str | None = None, tq: int = 8):
     """Replica-aware merge: collapse duplicate ids to their best distance, then
     exact global top-k. Handles arbitrary Q/P via row + power-of-two padding."""
-    impl = impl or _default_impl()
+    impl = impl or default_impl()
     if impl == "ref":
         return _ref.dedup_topk_ref(dists, ids, k)
     interpret = impl == "interpret" or jax.default_backend() != "tpu"
@@ -67,7 +109,7 @@ def dedup_topk(dists, ids, k: int, *, impl: str | None = None, tq: int = 8):
 
 def pq_adc(lut, codes, *, impl: str | None = None, tq: int = 128, tn: int = 128):
     """ADC distances [Q, N] from per-query LUTs and PQ codes."""
-    impl = impl or _default_impl()
+    impl = impl or default_impl()
     if impl == "ref":
         return _ref.pq_adc_ref(lut, codes)
     # interpret=None defers to the kernel's own backend detection (one policy)
@@ -82,7 +124,7 @@ def pq_adc_topk(lut, codes, cand_ids, k: int, *, cand_off=None, q_off=None,
     kernel's NEG_BIG-initialized scratch handles k > N pools natively.
     ``cand_off`` [N] / ``q_off`` [Q] are the residual-PQ offset terms
     (core.pq residual identity): cand_off re-ranks, q_off shifts distances."""
-    impl = impl or _default_impl()
+    impl = impl or default_impl()
     if impl == "ref":
         return _ref.pq_adc_topk_ref(lut, codes, cand_ids, k,
                                     cand_off=cand_off, q_off=q_off)
@@ -93,7 +135,7 @@ def pq_adc_topk(lut, codes, cand_ids, k: int, *, cand_off=None, q_off=None,
 
 def kmeans_assign(x, centroids, *, impl: str | None = None, tn: int = 512, tb: int = 128):
     """(argmin centroid, min sq-dist) per point."""
-    impl = impl or _default_impl()
+    impl = impl or default_impl()
     if impl == "ref":
         return _ref.kmeans_assign_ref(x, centroids)
     interpret = impl == "interpret" or jax.default_backend() != "tpu"

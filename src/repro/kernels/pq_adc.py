@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels._util import NEG_BIG, pad_rows as _pad_rows
+from repro.kernels._util import NEG_BIG, pad_dim, pad_rows as _pad_rows
 
 
 def _detect_interpret(interpret: bool | None) -> bool:
@@ -179,3 +179,103 @@ def pq_adc_topk(
         interpret=interpret,
     )(lp, cp, ip, cop, qop)
     return od[:qn], oi[:qn]
+
+
+def _pq_adc_topk_batched_kernel(lut_ref, codes_ref, cid_ref, coff_ref, qoff_ref,
+                                od_ref, oi_ref, run_d, run_i,
+                                *, k: int, ks: int, n_nblocks: int):
+    """One (bucket, q_tile, n_block) grid step; scratch re-initializes per
+    (bucket, q_tile) because the candidate-block axis is innermost."""
+    nb = pl.program_id(2)
+
+    @pl.when(nb == 0)
+    def _init():
+        run_d[...] = jnp.full_like(run_d, NEG_BIG)
+        run_i[...] = jnp.full_like(run_i, -1)
+
+    lut = lut_ref[0]          # [TQ, m, ks] f32
+    codes = codes_ref[0]      # [TN, m] int32
+    cid = cid_ref[0]          # [TN] int32, -1 = padding
+    coff = coff_ref[0]        # [TN] f32
+    qoff = qoff_ref[0]        # [TQ] f32
+    onehot = jax.nn.one_hot(codes, ks, dtype=lut.dtype)
+    d = jax.lax.dot_general(
+        lut.reshape(lut.shape[0], -1),
+        onehot.reshape(onehot.shape[0], -1),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [TQ, TN]
+    d = d + qoff[:, None] + coff[None, :]
+    negd = jnp.where(cid[None, :] < 0, NEG_BIG, -d)
+    merged_d = jnp.concatenate([run_d[...], negd], axis=1)
+    merged_i = jnp.concatenate(
+        [run_i[...], jnp.broadcast_to(cid[None, :], negd.shape)], axis=1)
+    top_d, pos = jax.lax.top_k(merged_d, k)
+    run_d[...] = top_d
+    run_i[...] = jnp.take_along_axis(merged_i, pos, axis=1)
+
+    @pl.when(nb == n_nblocks - 1)
+    def _flush():
+        invalid = run_d[...] <= NEG_BIG / 2
+        od_ref[0] = jnp.where(invalid, jnp.inf, -run_d[...])
+        oi_ref[0] = jnp.where(invalid, -1, run_i[...])
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tq", "tn", "interpret"))
+def pq_adc_topk_batched(
+    lut: jax.Array,       # [B, Q, m, ks] per-bucket per-query LUTs
+    codes: jax.Array,     # [B, N, m] integer PQ codes
+    cand_ids: jax.Array,  # [B, N] int32, -1 = padding
+    k: int,
+    *,
+    cand_off: jax.Array | None = None,  # [B, N] f32 added per candidate
+    q_off: jax.Array | None = None,     # [B, Q] f32 added per query
+    tq: int = 128,
+    tn: int = 128,
+    interpret: bool | None = None,
+):
+    """Grid-batched pq_adc_topk: all B (query-bucket, code-block) pairs in ONE
+    pallas launch — the quantized serve step's per-partition shortlist shape.
+    Offsets carry the residual-PQ corrections exactly like the flat kernel."""
+    bn, qn, m, ks = lut.shape
+    n = codes.shape[1]
+    interpret = _detect_interpret(interpret)
+    tq = min(tq, max(8, qn))
+    tn = min(tn, max(8, n))
+    lp = pad_dim(lut, 1, tq, 0.0)
+    cp = pad_dim(codes.astype(jnp.int32), 1, tn, 0)
+    ip = pad_dim(cand_ids.astype(jnp.int32), 1, tn, -1)
+    if cand_off is None:
+        cand_off = jnp.zeros((bn, n), jnp.float32)
+    if q_off is None:
+        q_off = jnp.zeros((bn, qn), jnp.float32)
+    cop = pad_dim(cand_off.astype(jnp.float32), 1, tn, 0.0)
+    qop = pad_dim(q_off.astype(jnp.float32), 1, tq, 0.0)
+    n_nblocks = cp.shape[1] // tn
+    kernel = functools.partial(_pq_adc_topk_batched_kernel, k=k, ks=ks,
+                               n_nblocks=n_nblocks)
+    od, oi = pl.pallas_call(
+        kernel,
+        grid=(bn, lp.shape[1] // tq, n_nblocks),
+        in_specs=[
+            pl.BlockSpec((1, tq, m, ks), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, tn, m), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tn), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, tn), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, tq), lambda b, i, j: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, k), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tq, k), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bn, lp.shape[1], k), jnp.float32),
+            jax.ShapeDtypeStruct((bn, lp.shape[1], k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lp, cp, ip, cop, qop)
+    return od[:, :qn], oi[:, :qn]

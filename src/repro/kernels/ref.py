@@ -15,9 +15,15 @@ def l2_topk_ref(q: jax.Array, cands: jax.Array, cand_ids: jax.Array, k: int):
         - 2.0 * q @ c.T
         + jnp.sum(c * c, -1)[None, :]
     )
-    d2 = jnp.where(cand_ids[None, :] < 0, jnp.inf, d2)
+    ids = cand_ids.astype(jnp.int32)
+    d2 = jnp.where(ids[None, :] < 0, jnp.inf, d2)
+    if d2.shape[1] < k:  # degenerate pools: pad so top_k is well-defined
+        pad = k - d2.shape[1]
+        d2 = jnp.concatenate([d2, jnp.full((d2.shape[0], pad), jnp.inf, d2.dtype)], axis=1)
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)])
     neg, pos = jax.lax.top_k(-d2, k)
-    return -neg, cand_ids[pos]
+    out_d = -neg
+    return out_d, jnp.where(jnp.isfinite(out_d), ids[pos], -1)
 
 
 def pq_adc_ref(lut: jax.Array, codes: jax.Array) -> jax.Array:
@@ -51,6 +57,26 @@ def pq_adc_topk_ref(lut: jax.Array, codes: jax.Array, cand_ids: jax.Array, k: in
     out_d = -neg
     out_i = jnp.where(jnp.isfinite(out_d), ids[pos], -1)
     return out_d, out_i
+
+
+def l2_topk_batched_ref(q: jax.Array, cands: jax.Array, cand_ids: jax.Array, k: int):
+    """[B,Q,d] x [B,C,d] -> ([B,Q,k], [B,Q,k]): l2_topk_ref vmapped over the
+    leading bucket axis (the batched kernels' oracle)."""
+    return jax.vmap(lambda qb, cb, ib: l2_topk_ref(qb, cb, ib, k))(q, cands, cand_ids)
+
+
+def pq_adc_topk_batched_ref(lut: jax.Array, codes: jax.Array, cand_ids: jax.Array,
+                            k: int, cand_off: jax.Array | None = None,
+                            q_off: jax.Array | None = None):
+    """[B,Q,m,ks] x [B,N,m] -> ([B,Q,k], [B,Q,k]): pq_adc_topk_ref vmapped over
+    the leading bucket axis, incl. the residual-PQ offset operands."""
+    if cand_off is None:
+        cand_off = jnp.zeros(codes.shape[:2], jnp.float32)
+    if q_off is None:
+        q_off = jnp.zeros(lut.shape[:2], jnp.float32)
+    return jax.vmap(
+        lambda lb, cb, ib, cob, qob: pq_adc_topk_ref(lb, cb, ib, k, cand_off=cob, q_off=qob)
+    )(lut, codes, cand_ids, cand_off, q_off)
 
 
 def dedup_topk_ref(dists: jax.Array, ids: jax.Array, k: int):

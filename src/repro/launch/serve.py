@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--residual", action="store_true",
                     help="residual PQ: encode x − centroid with per-partition "
                          "LUT offsets (implies --quantized)")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "ref", "pallas", "interpret"),
+                    help="partition-scan backend (serving/scan.py): auto picks "
+                         "the fused kernels on TPU, the portable jnp path "
+                         "elsewhere; interpret forces the kernels through the "
+                         "Pallas interpreter for parity checks")
     args = ap.parse_args()
     args.quantized = args.quantized or args.residual
 
@@ -40,7 +46,7 @@ def main():
     engine = LiraEngine.build(mesh, ds.base, n_partitions=args.partitions, k=10,
                               eta=0.05, train_frac=0.4, epochs=5,
                               quantized=args.quantized, rerank=args.rerank,
-                              residual=args.residual)
+                              residual=args.residual, impl=args.impl)
     if args.quantized:
         from repro.serving import scan_store_bytes
 
@@ -51,9 +57,10 @@ def main():
 
     print(f"serving {args.queries} queries…")
     t0 = time.time()
-    d, ids, nprobe = engine.search(ds.queries, sigma=args.sigma)
+    d, ids, nprobe, overflow = engine.search(ds.queries, sigma=args.sigma)
     dt = time.time() - t0
-    print(f"  {args.queries/dt:.0f} QPS local; adaptive nprobe mean={nprobe.mean():.2f}")
+    print(f"  {args.queries/dt:.0f} QPS local; adaptive nprobe mean={nprobe.mean():.2f}; "
+          f"dropped probes (q_cap overflow)={overflow}")
 
     # multi-pod control plane: route batches over replicas, kill one mid-stream
     router = ReplicaRouter(args.pods)

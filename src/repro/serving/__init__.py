@@ -1,2 +1,3 @@
+from repro.serving import scan  # noqa: F401  (backend-dispatched partition scan)
 from repro.serving.engine import make_bundle, LiraEngine  # noqa: F401
 from repro.serving.quantized import QuantizedStore, build_quantized_store, scan_store_bytes  # noqa: F401

@@ -11,19 +11,25 @@ serve_step:
   3. sort-based dispatch of queries into per-local-partition buckets of static
      capacity `q_cap` (the MoE-dispatch trick applied to ANN — compute scales
      with Q·nprobe·cap, NOT Q·N: partition pruning materializes as real FLOP
-     savings under static shapes);
-  4. per local partition: L2+top-k scan (portable jnp path under lax.map;
-     repro.kernels.l2_topk is the fused TPU kernel for this stage — wiring it
-     in on a real TPU backend is an open ROADMAP item). With cfg.quantized
-     the scan is two-stage:
-     per-query ADC LUT (computed once) → PQ-code shortlist of r·k candidates
-     (portable jnp gather path; wiring the fused kernels.pq_adc_topk in on a
-     real TPU backend is an open ROADMAP item) → exact f32 rerank of the
-     shortlist only, cutting the dominant vector-read traffic 8–32×
-     (serving/quantized.py). With cfg.residual_pq the codes encode
-     x − centroid and the scan adds the two scalar corrections of the
-     residual ADC identity (core/pq.py): a precomputed per-slot cterm plane
-     plus a per-(query, partition) offset derived from the probing cd matrix;
+     savings under static shapes). Batch-padding rows are masked out of
+     dispatch via the `valid` operand so they never steal q_cap slots from
+     real queries, and probes dropped by bucket overflow are COUNTED and
+     returned (the serve step's 4th output; `LiraEngine.search` surfaces the
+     total) instead of being silently swallowed;
+  4. per local partition: the scan stage is backend-dispatched through
+     serving/scan.py (cfg.impl: auto | ref | pallas | interpret). "ref" is the
+     portable jnp path under lax.map; "pallas" runs the fused kernels
+     grid-batched over the whole [b_loc, q_cap] dispatch buffer in one launch
+     (kernels.l2_topk_batched for f32; native on TPU, interpreted elsewhere).
+     With cfg.quantized the scan is two-stage: per-query ADC LUT (computed
+     once) → PQ-code shortlist of r·k candidates (kernels.pq_adc_topk_batched
+     on the kernel path) → exact f32 rerank of the shortlist only, cutting
+     the dominant vector-read traffic 8–32× (serving/quantized.py). With
+     cfg.residual_pq the codes encode x − centroid and the scan adds the two
+     scalar corrections of the residual ADC identity (core/pq.py): a
+     precomputed per-slot cterm plane plus a per-(query, partition) offset
+     derived from the probing cd matrix — threaded to the kernels as their
+     cand_off/q_off operands;
   5. scatter back per query, local top-k, all-gather(k·shards) over "model",
      final merge. Collective volume is O(Q·k), independent of N.
 
@@ -49,6 +55,7 @@ from repro.models.api import ModelBundle, StepDef, adamw_state_pspecs, adamw_sta
 from repro.train import optimizer as opt
 
 from repro.serving import quantized as quantized_tier
+from repro.serving import scan
 from repro.utils.compat import shard_map
 
 
@@ -103,7 +110,8 @@ def store_pspecs(mesh, cfg: LiraSystemConfig | None = None):
 
 def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float = 0.5,
                     q_cap_factor: float | None = None,
-                    quantized: bool | None = None):
+                    quantized: bool | None = None,
+                    impl: str | None = None):
     _, bspec, bprod = batch_mesh_info(mesh)
     model_n = mesh.shape.get("model", 1)
     q_row = n_queries // bprod
@@ -113,9 +121,12 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
     k = cfg.k
     quantized = getattr(cfg, "quantized", False) if quantized is None else quantized
     residual = quantized and getattr(cfg, "residual_pq", False)
+    impl = getattr(cfg, "impl", "auto") if impl is None else impl
+    scan_impl = scan.resolve_impl(impl)  # fail fast on typos, not at trace time
 
-    def f(q_loc, params, cents, vecs_loc, ids_loc, *qargs):
-        # q_loc: [q_row, d]; vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
+    def f(q_loc, valid_loc, params, cents, vecs_loc, ids_loc, *qargs):
+        # q_loc: [q_row, d]; valid_loc: [q_row] bool (False = batch padding);
+        # vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
         # qargs (quantized only): codes_loc [b_loc, cap, m], codebooks
         # [m, ks, d_sub] (+ cterm_loc [b_loc, cap] in residual mode)
         cd = (
@@ -127,6 +138,9 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         vals, pidx = jax.lax.top_k(p, cfg.nprobe_max)               # global partitions
         probe_ok = vals > sigma
         probe_ok = probe_ok.at[:, 0].set(True)                      # always ≥1 partition
+        # batch-padding rows must not probe: a pad query occupying q_cap slots
+        # can evict a real query's probes in small buckets
+        probe_ok = probe_ok & valid_loc[:, None]
 
         # ---- dispatch (sort-based, local partition range only)
         b0 = jax.lax.axis_index("model") * b_loc if model_n > 1 else 0
@@ -139,12 +153,16 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         start = jnp.searchsorted(skey, jnp.arange(b_loc + 1))
         pos = jnp.arange(skey.shape[0]) - start[jnp.clip(skey, 0, b_loc)]
         keep = (skey < b_loc) & (pos < q_cap)
+        # probes beyond a hot partition's q_cap are dropped — count them so
+        # recall degradation is reported, not silent (raise q_cap_factor or
+        # rebalance partitions when this is persistently > 0)
+        overflow = ((skey < b_loc) & (pos >= q_cap)).sum().astype(jnp.int32)
         row = jnp.where(keep, skey, b_loc)
         col = jnp.where(keep, pos, 0)
         qbuf = jnp.full((b_loc, q_cap), q_row, jnp.int32).at[row, col].set(
             flat_q[order], mode="drop")                              # q_row = invalid
 
-        # ---- per-partition scan (f32: fused l2+top-k; quantized: two-stage)
+        # ---- per-partition scan: backend-dispatched (serving/scan.py)
         q_pad = jnp.concatenate([q_loc, jnp.full((1, q_loc.shape[1]), 1e9, q_loc.dtype)], 0)
 
         if quantized:
@@ -152,17 +170,18 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
                 codes_loc, codebooks, cterm_loc = qargs
             else:
                 codes_loc, codebooks = qargs
+                cterm_loc = None
             m = codes_loc.shape[-1]
             cap = vecs_loc.shape[1]
             rk = min(cap, max(k, int(getattr(cfg, "rerank", 4)) * k))
             # stage 0: per-query ADC LUT, once — valid across all partitions.
             # Non-residual codebooks make this exact; residual codebooks make
             # it exact up to the two scalar corrections of the residual ADC
-            # identity (core/pq.py), added below inside the scan.
+            # identity (core/pq.py), added inside the scan stage.
             lut_pad = jnp.concatenate(
                 [quantized_tier.adc_lut(codebooks, q_loc),
                  jnp.zeros((1, m, codebooks.shape[1]), jnp.float32)], 0)
-            m_idx = jnp.arange(m)[:, None]
+            off_loc = None
             if residual:
                 # ‖c_b‖² − 2⟨q, c_b⟩ = cd − ‖q‖², per (query, partition); the
                 # centroid-distance matrix cd is already here for probing.
@@ -171,57 +190,11 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
                     [off, jnp.zeros((1, off.shape[1]), off.dtype)], 0)
                 off_loc = jax.lax.dynamic_slice_in_dim(
                     off_pad, b0, b_loc, axis=1).T                      # [b_loc, q_row+1]
-
-            def scan_partition(args):
-                if residual:
-                    qi, codes_b, vec_b, id_b, ct_b, off_b = args
-                else:
-                    qi, codes_b, vec_b, id_b = args    # [q_cap], [cap, m], [cap, d], [cap]
-                # stage 1: ADC shortlist over uint8 codes (TPU: pq_adc_topk
-                # fuses this scan incl. the offset operands; the gather path
-                # runs on every backend)
-                lq = lut_pad[qi]                                     # [q_cap, m, ks]
-                ad = lq[:, m_idx, codes_b.astype(jnp.int32).T].sum(1)  # [q_cap, cap]
-                if residual:
-                    # cross term re-ranks the shortlist; the per-(q, b) scalar
-                    # makes ad the exact L2 to each slot's reconstruction
-                    ad = ad + ct_b[None, :] + off_b[qi][:, None]
-                ad = jnp.where(id_b[None, :] < 0, jnp.inf, ad)
-                _, sl = jax.lax.top_k(-ad, rk)                       # shortlist slots
-                # stage 2: exact f32 rerank on the shortlist only
-                qs = q_pad[qi].astype(jnp.float32)
-                cand = vec_b[sl].astype(jnp.float32)                 # [q_cap, rk, d]
-                cid = id_b[sl]
-                d2 = (
-                    jnp.sum(qs * qs, -1)[:, None]
-                    - 2.0 * jnp.einsum("qd,qrd->qr", qs, cand)
-                    + jnp.sum(cand * cand, -1)
-                )
-                d2 = jnp.where(cid < 0, jnp.inf, d2)
-                neg, posk = jax.lax.top_k(-d2, k)
-                return -neg, jnp.take_along_axis(cid, posk, axis=1)  # [q_cap, k] ×2
-
-            scan_args = (qbuf, codes_loc, vecs_loc, ids_loc)
-            if residual:
-                scan_args = scan_args + (cterm_loc, off_loc)
-            dists, rids = jax.lax.map(scan_partition, scan_args)     # [b_loc, q_cap, k]
+            dists, rids = scan.run(scan_impl, qbuf, q_pad, vecs_loc, ids_loc, k,
+                                   lut_pad=lut_pad, codes_loc=codes_loc, rk=rk,
+                                   cterm_loc=cterm_loc, off_loc=off_loc)
         else:
-            def scan_partition(args):
-                qi, vec_b, id_b = args                               # [q_cap], [cap, d], [cap]
-                qs = q_pad[qi].astype(vec_b.dtype)                   # [q_cap, d]
-                # bf16 operands + f32 accumulation (store_dtype=bfloat16 halves
-                # the dominant vector-read traffic; exact rerank happens at f32)
-                d2 = (
-                    jnp.sum(qs.astype(jnp.float32) ** 2, -1, keepdims=True)
-                    - 2.0 * jax.lax.dot_general(qs, vec_b, (((1,), (1,)), ((), ())),
-                                                preferred_element_type=jnp.float32)
-                    + jnp.sum(vec_b.astype(jnp.float32) ** 2, -1)[None, :]
-                )
-                d2 = jnp.where(id_b[None, :] < 0, jnp.inf, d2)
-                neg, posk = jax.lax.top_k(-d2, k)
-                return -neg, id_b[posk]                              # [q_cap, k] ×2
-
-            dists, rids = jax.lax.map(scan_partition, (qbuf, vecs_loc, ids_loc))  # [b_loc, q_cap, k]
+            dists, rids = scan.run(scan_impl, qbuf, q_pad, vecs_loc, ids_loc, k)
 
         # ---- scatter back per query, local merge
         out_d = jnp.full((q_row + 1, b_loc, k), jnp.inf, jnp.float32)
@@ -242,19 +215,23 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
             all_d = jax.lax.all_gather(loc_d, "model", axis=1, tiled=True)   # [q_row, 16k]
             all_i = jax.lax.all_gather(loc_i, "model", axis=1, tiled=True)
             loc_d, loc_i = kops.dedup_topk(all_d, all_i, k)
+            overflow = jax.lax.psum(overflow, "model")
         nprobe_eff = probe_ok.sum(-1).astype(jnp.float32)
-        return loc_d, loc_i, nprobe_eff
+        return loc_d, loc_i, nprobe_eff, overflow[None]
 
     param_spec = jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg))
-    in_specs = (P(bspec, None), param_spec, P(None, None),
+    in_specs = (P(bspec, None), P(bspec), param_spec, P(None, None),
                 P("model", None, None), P("model", None))
     if quantized:
         in_specs = in_specs + (P("model", None, None), P(None, None, None))
         if residual:
             in_specs = in_specs + (P("model", None),)
 
-    def serve_step(params, store, queries):
-        args = (queries, params, store["centroids"], store["vectors"], store["ids"])
+    def serve_step(params, store, queries, valid=None):
+        if valid is None:
+            valid = jnp.ones((n_queries,), jnp.bool_)
+        args = (queries, valid, params, store["centroids"], store["vectors"],
+                store["ids"])
         if quantized:
             args = args + (store["codes"], store["codebooks"])
             if residual:
@@ -262,7 +239,7 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         return shard_map(
             f, mesh=mesh,
             in_specs=in_specs,
-            out_specs=(P(bspec, None), P(bspec, None), P(bspec)),
+            out_specs=(P(bspec, None), P(bspec, None), P(bspec), P(bspec)),
             check_vma=False,
         )(*args)
 
@@ -358,9 +335,10 @@ class LiraEngine:
     """End-to-end host-driven engine: build (k-means → train probe → redundancy
     → store [→ PQ codes]) then serve batches via the distributed serve_step.
 
-    Jitted serve steps are cached per (padded batch size, σ, quantized): query
-    batches are padded to power-of-two buckets so repeated traffic of varying
-    size hits the jit cache instead of recompiling every call.
+    Jitted serve steps are cached per (padded batch size, σ, tier, scan impl):
+    query batches are padded to power-of-two buckets so repeated traffic of
+    varying size hits the jit cache instead of recompiling every call, and the
+    pad rows are masked out of dispatch (they never probe or take q_cap slots).
     """
 
     cfg: LiraSystemConfig
@@ -376,7 +354,8 @@ class LiraEngine:
               eta: float = 0.03, train_frac: float = 0.5, epochs: int = 8,
               nprobe_max: Optional[int] = None, seed: int = 0, log: bool = False,
               quantized: bool = False, pq_m: Optional[int] = None,
-              pq_ks: int = 256, rerank: int = 4, residual: bool = False):
+              pq_ks: int = 256, rerank: int = 4, residual: bool = False,
+              impl: str = "auto"):
         from repro.core import build_store, ground_truth as gt, kmeans_fit
         from repro.core.redundancy import plan_redundancy, replica_rows
         from repro.core.train_probing import train_probing_model
@@ -420,7 +399,7 @@ class LiraEngine:
             capacity=store_h.capacity, k=k,
             nprobe_max=min(n_partitions, nprobe_max or max(8, n_partitions // 8)),
             quantized=quantized, pq_m=pq_m or 16, pq_ks=pq_ks, rerank=rerank,
-            residual_pq=quantized and residual,
+            residual_pq=quantized and residual, impl=impl,
         )
         return cls(cfg=cfg, params=params, store=store, mesh=mesh)
 
@@ -434,29 +413,48 @@ class LiraEngine:
 
     _SERVE_CACHE_MAX = 32  # σ sweeps must not accumulate compiled steps forever
 
-    def serve_fn(self, nq_pad: int, sigma: float, quantized: bool):
-        """The cached jitted serve step for one (bucket, σ, tier) key."""
-        key = (nq_pad, float(sigma), bool(quantized))
+    def serve_fn(self, nq_pad: int, sigma: float, quantized: bool,
+                 impl: Optional[str] = None):
+        """The cached jitted serve step for one (bucket, σ, tier, impl) key."""
+        # normalize before keying: None, "auto" and the resolved backend name
+        # must share one compiled step
+        impl = scan.resolve_impl(
+            impl if impl is not None else getattr(self.cfg, "impl", "auto"))
+        key = (nq_pad, float(sigma), bool(quantized), impl)
         fn = self._serve_cache.pop(key, None)
         if fn is None:
             fn = jax.jit(make_serve_step(self.cfg, self.mesh, nq_pad,
-                                         sigma=float(sigma), quantized=quantized))
+                                         sigma=float(sigma), quantized=quantized,
+                                         impl=impl))
         self._serve_cache[key] = fn  # re-insert: dict order doubles as LRU
         while len(self._serve_cache) > self._SERVE_CACHE_MAX:
             self._serve_cache.pop(next(iter(self._serve_cache)))
         return fn
 
     def search(self, queries: np.ndarray, sigma: Optional[float] = None,
-               quantized: Optional[bool] = None):
+               quantized: Optional[bool] = None, impl: Optional[str] = None):
+        """Returns (dists [nq, k], ids [nq, k], nprobe_eff [nq], overflow).
+
+        ``overflow`` is the total number of probes dropped because a hot
+        partition's dispatch bucket filled up (q_cap) — 0 means every
+        requested probe was scanned; persistent overflow means recall is
+        degraded and q_cap_factor should be raised. ``impl`` overrides the
+        config's partition-scan backend (scan.py) for this call."""
         sigma = self.sigma if sigma is None else sigma
         quantized = getattr(self.cfg, "quantized", False) if quantized is None else quantized
         if quantized and "codes" not in self.store:
             raise ValueError("engine has no quantized store; build with quantized=True")
         nq = queries.shape[0]
         nq_pad = self._batch_bucket(nq)
-        fn = self.serve_fn(nq_pad, sigma, quantized)
+        fn = self.serve_fn(nq_pad, sigma, quantized, impl)
         qp = np.zeros((nq_pad, self.cfg.dim), np.float32)
         qp[:nq] = queries
+        # pad rows are masked out of dispatch: they must not probe partitions
+        # or occupy q_cap slots that real queries need
+        valid = np.zeros((nq_pad,), bool)
+        valid[:nq] = True
         with self.mesh:
-            d, i, npb = fn(self.params, self.store, jnp.asarray(qp))
-        return np.asarray(d)[:nq], np.asarray(i)[:nq], np.asarray(npb)[:nq]
+            d, i, npb, ovf = fn(self.params, self.store, jnp.asarray(qp),
+                                jnp.asarray(valid))
+        return (np.asarray(d)[:nq], np.asarray(i)[:nq], np.asarray(npb)[:nq],
+                int(np.asarray(ovf).sum()))

@@ -1,0 +1,182 @@
+"""Backend-dispatched per-partition scan — the serve step's hot stage.
+
+The serve step turns query→partition routing into static-shape dispatch
+buckets: ``qbuf [b_loc, q_cap]`` holds the queries assigned to each local
+partition (``q_row`` = empty slot). This module owns everything after that:
+scanning each partition's candidates for every query in its bucket and
+returning per-(partition, slot) top-k, behind ONE signature with three
+interchangeable implementations:
+
+  * ``ref``       — portable jnp paths under ``lax.map`` (every backend; the
+                    parity oracle for the kernels);
+  * ``pallas``    — the fused Pallas kernels, grid-batched over the whole
+                    ``[b_loc, q_cap]`` dispatch buffer in one launch
+                    (``kernels.l2_topk_batched`` for the f32 tier,
+                    ``kernels.pq_adc_topk_batched`` for the quantized tiers,
+                    threading the residual ``cand_off``/``q_off`` operands).
+                    Compiles natively on TPU, interprets elsewhere;
+  * ``interpret`` — the kernels forced through the Pallas interpreter on any
+                    backend (what CI's parity suite and bench smoke run).
+
+Tier semantics (identical across impls — the parity suite asserts bit-equal
+distances and set-equal ids):
+
+  f32:        fused L2 + running top-k over the partition's vectors;
+  quantized:  stage 1 ADC shortlist of ``rk`` slots from the shared per-query
+              LUT (+ residual per-slot ``cterm`` and per-(query, partition)
+              offset when given), stage 2 exact f32 rerank of the shortlist.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+IMPLS = ("ref", "pallas", "interpret")
+
+
+def resolve_impl(impl: str | None) -> str:
+    """Map the config knob to a concrete impl: auto defers to the kernels'
+    shared backend policy (kops.default_impl). Fails fast on typos."""
+    if impl in (None, "auto"):
+        return kops.default_impl()
+    if impl not in IMPLS:
+        raise ValueError(f"unknown scan impl {impl!r}; expected one of "
+                         f"('auto', {', '.join(repr(s) for s in IMPLS)})")
+    return impl
+
+
+def run(impl: str | None, qbuf, q_pad, vecs_loc, ids_loc, k: int, *,
+        lut_pad=None, codes_loc=None, rk: int | None = None,
+        cterm_loc=None, off_loc=None):
+    """Scan every local partition's candidates for its dispatched queries.
+
+    qbuf      [b_loc, q_cap] int32 — query row per slot, ``q_row`` = empty
+    q_pad     [q_row + 1, d]       — queries + sentinel row for empty slots
+    vecs_loc  [b_loc, cap, d]      — partition vectors (rerank operand)
+    ids_loc   [b_loc, cap] int32   — point ids, -1 = padding
+    lut_pad   [q_row + 1, m, ks]   — quantized only: shared ADC LUTs + zero row
+    codes_loc [b_loc, cap, m]      — quantized only: PQ codes
+    rk        int                  — quantized only: shortlist depth
+    cterm_loc [b_loc, cap]         — residual only: per-slot cross terms
+    off_loc   [b_loc, q_row + 1]   — residual only: per-(partition, query)
+                                     offsets, zero row for empty slots
+
+    Returns ([b_loc, q_cap, k] dists, [b_loc, q_cap, k] ids); rows for empty
+    slots hold garbage — the serve step's scatter drops them.
+    """
+    impl = resolve_impl(impl)
+    if lut_pad is not None:
+        if impl == "ref":
+            return _quantized_ref(qbuf, q_pad, vecs_loc, ids_loc, k,
+                                  lut_pad, codes_loc, rk, cterm_loc, off_loc)
+        return _quantized_kernel(qbuf, q_pad, vecs_loc, ids_loc, k,
+                                 lut_pad, codes_loc, rk, cterm_loc, off_loc, impl)
+    if impl == "ref":
+        return _f32_ref(qbuf, q_pad, vecs_loc, ids_loc, k)
+    return _f32_kernel(qbuf, q_pad, vecs_loc, ids_loc, k, impl)
+
+
+# ------------------------------------------------------------------ f32 tier
+
+def _f32_ref(qbuf, q_pad, vecs_loc, ids_loc, k):
+    def scan_partition(args):
+        qi, vec_b, id_b = args                               # [q_cap], [cap, d], [cap]
+        qs = q_pad[qi].astype(vec_b.dtype)                   # [q_cap, d]
+        # bf16 operands + f32 accumulation (store_dtype=bfloat16 halves the
+        # dominant vector-read traffic; exact rerank happens at f32)
+        d2 = (
+            jnp.sum(qs.astype(jnp.float32) ** 2, -1, keepdims=True)
+            - 2.0 * jax.lax.dot_general(qs, vec_b, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+            + jnp.sum(vec_b.astype(jnp.float32) ** 2, -1)[None, :]
+        )
+        d2 = jnp.where(id_b[None, :] < 0, jnp.inf, d2)
+        neg, posk = jax.lax.top_k(-d2, k)
+        return -neg, id_b[posk]                              # [q_cap, k] ×2
+
+    return jax.lax.map(scan_partition, (qbuf, vecs_loc, ids_loc))
+
+
+def _f32_kernel(qbuf, q_pad, vecs_loc, ids_loc, k, impl):
+    qg = q_pad[qbuf].astype(vecs_loc.dtype)                  # [b_loc, q_cap, d]
+    return kops.l2_topk_batched(qg, vecs_loc, ids_loc, k, impl=impl)
+
+
+# ------------------------------------------------------------ quantized tiers
+
+def _quantized_ref(qbuf, q_pad, vecs_loc, ids_loc, k, lut_pad, codes_loc, rk,
+                   cterm_loc, off_loc):
+    m = codes_loc.shape[-1]
+    m_idx = jnp.arange(m)[:, None]
+    residual = cterm_loc is not None
+
+    def scan_partition(args):
+        if residual:
+            qi, codes_b, vec_b, id_b, ct_b, off_b = args
+        else:
+            qi, codes_b, vec_b, id_b = args    # [q_cap], [cap, m], [cap, d], [cap]
+        # stage 1: ADC shortlist over the partition's codes from the shared LUT
+        lq = lut_pad[qi]                                     # [q_cap, m, ks]
+        ad = lq[:, m_idx, codes_b.astype(jnp.int32).T].sum(1)  # [q_cap, cap]
+        if residual:
+            # offset add order mirrors the kernel (q_off then cand_off) so the
+            # shortlist selection agrees bitwise across impls
+            ad = ad + off_b[qi][:, None] + ct_b[None, :]
+        ad = jnp.where(id_b[None, :] < 0, jnp.inf, ad)
+        _, sl = jax.lax.top_k(-ad, rk)                       # shortlist slots
+        # stage 2: exact f32 rerank on the shortlist only
+        qs = q_pad[qi].astype(jnp.float32)
+        cand = vec_b[sl].astype(jnp.float32)                 # [q_cap, rk, d]
+        cid = id_b[sl]
+        d2 = (
+            jnp.sum(qs * qs, -1)[:, None]
+            - 2.0 * jnp.einsum("qd,qrd->qr", qs, cand)
+            + jnp.sum(cand * cand, -1)
+        )
+        d2 = jnp.where(cid < 0, jnp.inf, d2)
+        neg, posk = jax.lax.top_k(-d2, k)
+        return -neg, jnp.take_along_axis(cid, posk, axis=1)  # [q_cap, k] ×2
+
+    scan_args = (qbuf, codes_loc, vecs_loc, ids_loc)
+    if residual:
+        scan_args = scan_args + (cterm_loc, off_loc)
+    return jax.lax.map(scan_partition, scan_args)
+
+
+def _quantized_kernel(qbuf, q_pad, vecs_loc, ids_loc, k, lut_pad, codes_loc, rk,
+                      cterm_loc, off_loc, impl):
+    b_loc, _ = qbuf.shape
+    cap = vecs_loc.shape[1]
+    # stage 1: one fused launch over all buckets. The kernel ranks by ADC and
+    # returns the ids it was given — feed it SLOT indices so the shortlist can
+    # gather the f32 rerank operands (invalid slots come back as -1).
+    # NOTE: this gather materializes one LUT copy per occupied bucket slot
+    # (~nprobe·q_cap_factor× the per-query LUT footprint) before the launch;
+    # at pod scale the kernel should gather per q-tile from lut_pad via
+    # scalar-prefetched qbuf instead — ROADMAP follow-up.
+    lq = lut_pad[qbuf]                                       # [b_loc, q_cap, m, ks]
+    slots = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32)[None, :], (b_loc, cap))
+    slots = jnp.where(ids_loc < 0, -1, slots)
+    coff = qoff = None
+    if cterm_loc is not None:
+        coff = cterm_loc                                     # [b_loc, cap]
+        qoff = jnp.take_along_axis(off_loc, qbuf, axis=1)    # [b_loc, q_cap]
+    _, sl = kops.pq_adc_topk_batched(lq, codes_loc, slots, rk,
+                                     cand_off=coff, q_off=qoff, impl=impl)
+    # stage 2: exact f32 rerank of the shortlist (same math as the ref path)
+    safe = jnp.maximum(sl, 0)                                # [b_loc, q_cap, rk]
+    cid = jnp.where(sl >= 0,
+                    jnp.take_along_axis(ids_loc[:, None, :], safe, axis=2), -1)
+    cand = jnp.take_along_axis(vecs_loc[:, None], safe[..., None],
+                               axis=2).astype(jnp.float32)   # [b_loc, q_cap, rk, d]
+    qs = q_pad[qbuf].astype(jnp.float32)                     # [b_loc, q_cap, d]
+    d2 = (
+        jnp.sum(qs * qs, -1)[..., None]
+        - 2.0 * jnp.einsum("bqd,bqrd->bqr", qs, cand)
+        + jnp.sum(cand * cand, -1)
+    )
+    d2 = jnp.where(cid < 0, jnp.inf, d2)
+    neg, posk = jax.lax.top_k(-d2, k)
+    return -neg, jnp.take_along_axis(cid, posk, axis=-1)

@@ -1,0 +1,47 @@
+"""Pure-numpy twin of serving/scan.py — the third implementation in the
+parity triangle (Pallas kernel vs jnp ref vs numpy). Loops per (partition,
+slot) with float64 accumulation: slow, obviously correct, shared by the unit
+parity tests and the bench smoke."""
+import numpy as np
+
+
+def scan_np(qbuf, q_pad, vecs, ids, k, lut_pad=None, codes=None, rk=None,
+            cterm=None, off=None):
+    """Numpy mirror of scan.run: ([b_loc, q_cap, k] dists, ids).
+
+    Same contract: ``qbuf`` slots equal to ``q_row`` are empty (their output
+    rows are unspecified — compare only occupied slots), ids < 0 are padding,
+    and the quantized path shortlists ``rk`` slots by ADC before the exact
+    rerank. Distances accumulate in float64 — set-level comparisons only.
+    """
+    b_loc, q_cap = qbuf.shape
+    q_row = q_pad.shape[0] - 1
+    quantized = lut_pad is not None
+    out_d = np.full((b_loc, q_cap, k), np.inf, np.float64)
+    out_i = np.full((b_loc, q_cap, k), -1, np.int32)
+    for b in range(b_loc):
+        valid = ids[b] >= 0
+        for s in range(q_cap):
+            qi = int(qbuf[b, s])
+            if qi >= q_row:
+                continue  # empty slot
+            qv = q_pad[qi].astype(np.float64)
+            if quantized:
+                ad = lut_pad[qi][np.arange(codes.shape[-1]),
+                                 codes[b].astype(np.int64)].sum(-1).astype(np.float64)
+                if cterm is not None:
+                    ad = ad + off[b, qi] + cterm[b].astype(np.float64)
+                ad = np.where(valid, ad, np.inf)
+                sl = np.argsort(ad, kind="stable")[:rk]
+                cand = vecs[b][sl].astype(np.float64)
+                cid = ids[b][sl]
+                d2 = ((qv[None, :] - cand) ** 2).sum(-1)
+                d2 = np.where(cid >= 0, d2, np.inf)
+            else:
+                d2 = ((qv[None, :] - vecs[b].astype(np.float64)) ** 2).sum(-1)
+                d2 = np.where(valid, d2, np.inf)
+                cid = ids[b]
+            top = np.argsort(d2, kind="stable")[:k]
+            out_d[b, s, : len(top)] = d2[top]
+            out_i[b, s, : len(top)] = np.where(np.isfinite(d2[top]), cid[top], -1)
+    return out_d, out_i

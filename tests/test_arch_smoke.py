@@ -58,10 +58,14 @@ def test_arch_smoke(arch, mesh):
                 assert score.shape == (shape["batch"],)
                 assert _finite(score)
             elif shape.kind == "lira_serve":
-                d, i, npb = jax.jit(sd.fn)(params, inputs["store"], inputs["queries"])
+                d, i, npb, ovf = jax.jit(sd.fn)(params, inputs["store"], inputs["queries"])
                 assert d.shape == (shape["n_queries"], smoke.k)
                 assert i.shape == (shape["n_queries"], smoke.k)
                 assert float(npb.mean()) >= 1.0
+                # overflow is a per-batch-shard int32 count (bprod=1 here)
+                ovf = jnp.asarray(ovf)
+                assert ovf.shape == (1,) and ovf.dtype == jnp.int32
+                assert int(ovf.sum()) >= 0
             else:
                 raise AssertionError(shape.kind)
 
@@ -84,7 +88,7 @@ def test_lira_serve_matches_bruteforce(mesh):
     q = host.normal(0, 1, (16, 8)).astype(np.float32)
     fn = make_serve_step(cfg, mesh, 16, sigma=-1.0, q_cap_factor=8.0)  # probe all
     with mesh:
-        d, i, npb = jax.jit(fn)(params, store, jnp.asarray(q))
+        d, i, npb, _ = jax.jit(fn)(params, store, jnp.asarray(q))
     flat = vecs.reshape(-1, 8)
     exact = ((q[:, None] - flat[None]) ** 2).sum(-1)
     gt_ids = np.argsort(exact, 1)[:, :5]

@@ -115,6 +115,28 @@ def test_lira_beats_ivf_tradeoff(small_index, small_dataset, trained_probing):
     assert lira.cmp_mean < ivf.cmp_mean
 
 
+def test_probe_mask_always_includes_argmax(small_index, small_dataset, trained_probing):
+    """predict_probe_mask mirrors the serve step's ≥1-probe guarantee: at any
+    σ every query keeps its arg-max partition, so training-time nprobe/recall
+    metrics (_probe_quality) no longer understate serving behavior at high σ
+    where a threshold-only mask goes empty."""
+    store, assign, cents, gti, k = small_index
+    params, _ = trained_probing
+    ds = small_dataset
+    q = jnp.asarray(ds.queries)
+    cd = jnp.asarray(ret.lira_inputs(store, ds.queries))
+    # σ=1: sigmoid(p̂) < 1 everywhere, so the threshold alone selects nothing
+    mask, p = probing.predict_probe_mask(params, q, cd, sigma=1.0)
+    mask, p = np.asarray(mask), np.asarray(p)
+    assert (mask.sum(-1) >= 1).all()
+    rows = np.arange(len(p))
+    assert mask[rows, p.argmax(-1)].all()       # the kept partition is arg-max
+    assert (np.asarray(probing.predicted_nprobe(params, q, cd, 1.0)) >= 1).all()
+    # at moderate σ the forced arg-max is a superset of the raw threshold mask
+    mask_mid, _ = probing.predict_probe_mask(params, q, cd, sigma=0.5)
+    assert (np.asarray(mask_mid) >= (p > 0.5)).all()
+
+
 def test_redundancy_reduces_nprobe(small_index, small_dataset, trained_probing):
     """Insight 2: duplicating long-tail points lowers cost at matched recall."""
     store, assign, cents, gti, k = small_index

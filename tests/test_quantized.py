@@ -124,8 +124,8 @@ def test_quantized_recall_within_2pct_of_f32(smoke_engines):
     from repro.core.metrics import recall_at_k
 
     eng, ds, gti = smoke_engines
-    _, i_f, _ = eng.search(ds.queries, sigma=-1.0, quantized=False)
-    _, i_q, _ = eng.search(ds.queries, sigma=-1.0, quantized=True)
+    _, i_f, _, _ = eng.search(ds.queries, sigma=-1.0, quantized=False)
+    _, i_q, _, _ = eng.search(ds.queries, sigma=-1.0, quantized=True)
     r_f, r_q = recall_at_k(i_f, gti, 10), recall_at_k(i_q, gti, 10)
     assert r_f == pytest.approx(1.0, abs=1e-6)  # full probe f32 is exact
     assert r_q >= r_f - 0.02, (r_q, r_f)
@@ -157,7 +157,7 @@ def test_quantized_replica_dedup_no_duplicate_ids():
     eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=make_test_mesh(),
                      sigma=-1.0)  # σ=-1: every replica pair is visited
     q = host.normal(size=(16, dim)).astype(np.float32)
-    d, i, npb = eng.search(q)
+    d, i, npb, _ = eng.search(q)
     assert (npb == b).all()
     for r in range(len(q)):
         row = i[r][i[r] >= 0].tolist()
@@ -177,8 +177,8 @@ def test_search_jit_cache_buckets(smoke_engines):
     cache entry; results are sliced back to the true batch size."""
     eng, ds, _ = smoke_engines
     eng._serve_cache.clear()
-    d5, i5, n5 = eng.search(ds.queries[:5], sigma=0.4)
-    d7, i7, n7 = eng.search(ds.queries[:7], sigma=0.4)
+    d5, i5, n5, _ = eng.search(ds.queries[:5], sigma=0.4)
+    d7, i7, n7, _ = eng.search(ds.queries[:7], sigma=0.4)
     assert d5.shape == (5, 10) and d7.shape == (7, 10) and n7.shape == (7,)
     assert len(eng._serve_cache) == 1  # 5 and 7 share the 8-bucket
     eng.search(ds.queries[:20], sigma=0.4)

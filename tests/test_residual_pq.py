@@ -253,8 +253,8 @@ def test_residual_recall_gate_on_clustered_data(clustered_engines):
     recall@10 must be ≥ non-residual on clustered data — the reason this PR
     exists. The margin on this workload is ~15 points, far above seed noise."""
     eng_nr, eng_r, ds, gti = clustered_engines
-    _, i_nr, _ = eng_nr.search(ds.queries, sigma=-1.0, quantized=True)
-    _, i_r, _ = eng_r.search(ds.queries, sigma=-1.0, quantized=True)
+    _, i_nr, _, _ = eng_nr.search(ds.queries, sigma=-1.0, quantized=True)
+    _, i_r, _, _ = eng_r.search(ds.queries, sigma=-1.0, quantized=True)
     r_nr, r_r = recall_at_k(i_nr, gti, 10), recall_at_k(i_r, gti, 10)
     assert r_r >= r_nr, (r_r, r_nr)
 
@@ -285,7 +285,7 @@ def test_residual_recall_within_2pct_of_f32(clustered_engines):
     """Mirror of tests/test_quantized.py's non-residual case: with probe-all
     σ the residual tier must stay within 2% of the exact path."""
     eng_nr, eng_r, ds, gti = clustered_engines
-    _, i_f, _ = eng_r.search(ds.queries, sigma=-1.0, quantized=False)
+    _, i_f, _, _ = eng_r.search(ds.queries, sigma=-1.0, quantized=False)
     r_f = recall_at_k(i_f, gti, 10)
     assert r_f == pytest.approx(1.0, abs=1e-6)  # full probe f32 is exact
     # rerank=2 is deliberately starved to expose the residual-vs-non-residual
@@ -293,7 +293,7 @@ def test_residual_recall_within_2pct_of_f32(clustered_engines):
     # production shortlist depth instead
     eng_deep = LiraEngine(cfg=dataclasses.replace(eng_r.cfg, rerank=16),
                           params=eng_r.params, store=eng_r.store, mesh=eng_r.mesh)
-    _, i_q, _ = eng_deep.search(ds.queries, sigma=-1.0, quantized=True)
+    _, i_q, _, _ = eng_deep.search(ds.queries, sigma=-1.0, quantized=True)
     assert recall_at_k(i_q, gti, 10) >= r_f - 0.02
 
 
@@ -338,7 +338,7 @@ def test_residual_replica_dedup_no_duplicate_ids_eta_pos():
     eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=make_test_mesh(),
                      sigma=-1.0)  # σ=-1: every replica pair is visited
     q = host.normal(size=(16, dim)).astype(np.float32)
-    d, i, npb = eng.search(q)
+    d, i, npb, _ = eng.search(q)
     assert (npb == b).all()
     _, gti = gt.exact_knn(q, x, k)
     assert recall_at_k(i, gti, k) >= 0.98  # probe-all + deep rerank ≈ exact

@@ -49,7 +49,7 @@ def test_full_probe_equals_bruteforce(b, cap, nq, k, seed):
     q = host.normal(0, 1, (nq, dim)).astype(np.float32)
     fn = make_serve_step(cfg, _mesh(), nq, sigma=-1.0, q_cap_factor=float(nq))
     with _mesh():
-        d, i, npb = jax.jit(fn)(params, store, jnp.asarray(q))
+        d, i, npb, ovf = jax.jit(fn)(params, store, jnp.asarray(q))
     flat = vecs.reshape(-1, dim)
     exact = ((q[:, None] - flat[None]) ** 2).sum(-1)
     for r in range(nq):
@@ -59,6 +59,7 @@ def test_full_probe_equals_bruteforce(b, cap, nq, k, seed):
         assert got == want or np.allclose(
             sorted(exact[r][sorted(got)]), sorted(exact[r][sorted(want)]), atol=1e-5)
     assert float(np.asarray(npb).mean()) == b
+    assert int(np.asarray(ovf).sum()) == 0  # q_cap covers the full probe load
 
 
 @settings(max_examples=10, deadline=None)
@@ -79,7 +80,7 @@ def test_partial_probe_results_are_valid_and_sorted(seed, sigma):
     q = host.normal(0, 1, (nq, dim)).astype(np.float32)
     fn = make_serve_step(cfg, _mesh(), nq, sigma=float(sigma), q_cap_factor=8.0)
     with _mesh():
-        d, i, npb = jax.jit(fn)(params, store, jnp.asarray(q))
+        d, i, npb, ovf = jax.jit(fn)(params, store, jnp.asarray(q))
     d, i, npb = np.asarray(d), np.asarray(i), np.asarray(npb)
     finite = np.isfinite(d)
     assert ((i >= -1) & (i < b * cap)).all()
