@@ -61,7 +61,7 @@ def _engine():
     cfg = LiraSystemConfig(
         arch="lira", dim=ds.base.shape[1], n_partitions=B,
         capacity=s_lira.capacity, k=K, nprobe_max=16,
-        quantized=True, pq_m=PQ_M, pq_ks=qs.ks, rerank=RERANK)
+        tier="pq", pq_m=PQ_M, pq_ks=qs.ks, rerank=RERANK)
     store = {"centroids": s_lira.centroids, "vectors": s_lira.vectors,
              "ids": s_lira.ids, "codes": qs.codes, "codebooks": qs.codebooks}
     import jax.numpy as jnp
@@ -76,15 +76,14 @@ def run(emit):
     gti = gti[:N_QUERIES, :K]
 
     results = {}
-    for tier in ("f32", "adc"):
-        quantized = tier == "adc"
-        _, ids, _, _ = eng.search(q, sigma=SIGMA, quantized=quantized)  # warm jit
+    for label, tier in (("f32", "f32"), ("adc", "pq")):
+        ids = eng.search(q, sigma=SIGMA, tier=tier).ids  # warm jit
         t0 = time.perf_counter()
         reps = 3
         for _ in range(reps):
-            eng.search(q, sigma=SIGMA, quantized=quantized)
+            eng.search(q, sigma=SIGMA, tier=tier)
         dt = (time.perf_counter() - t0) / reps
-        results[tier] = (dt, recall_at_k(ids, gti, K))
+        results[label] = (dt, recall_at_k(ids, gti, K))
 
     sb = scan_store_bytes(eng.store)
     (t_f, r_f), (t_q, r_q) = results["f32"], results["adc"]
@@ -129,10 +128,13 @@ def _clustered_engines():
                                     noise_frac=0.0, seed=CL_SEED))
 
     def build():
+        from repro.serving import BuildConfig
+
         eng = LiraEngine.build(
-            make_test_mesh(), ds.base, n_partitions=CL_B, k=K, eta=CL_ETA,
-            train_frac=0.25, epochs=5, nprobe_max=CL_B, quantized=True,
-            pq_m=CL_M, pq_ks=CL_KS, rerank=CL_RERANK)
+            make_test_mesh(), ds.base, BuildConfig(
+                n_partitions=CL_B, k=K, eta=CL_ETA, train_frac=0.25, epochs=5,
+                nprobe_max=CL_B, tier="pq", pq_m=CL_M, pq_ks=CL_KS,
+                rerank=CL_RERANK))
         qs = build_quantized_store(
             jax.random.PRNGKey(1), eng.store["vectors"], eng.store["ids"],
             m=CL_M, ks=eng.cfg.pq_ks, residual=True,
@@ -146,7 +148,7 @@ def _clustered_engines():
                         mesh=make_test_mesh())
     store_r = {**store, "codes": qs.codes, "codebooks": qs.codebooks,
                "cterm": qs.cterm}
-    eng_r = LiraEngine(cfg=dataclasses.replace(cfg, residual_pq=True),
+    eng_r = LiraEngine(cfg=dataclasses.replace(cfg, tier="residual_pq"),
                        params=params, store=store_r, mesh=eng_nr.mesh)
     return eng_nr, eng_r, ds
 
@@ -163,12 +165,12 @@ def _run_residual_compare(emit):
 
     recalls, times = {}, {}
     # probe-all σ: f32 is then exact, so each tier's gap is pure quantization
-    for name, eng, quantized in (("f32", eng_r, False),
-                                 ("nonres", eng_nr, True),
-                                 ("res", eng_r, True)):
-        _, ids, _, _ = eng.search(q, sigma=-1.0, quantized=quantized)  # warm jit
+    for name, eng, tier in (("f32", eng_r, "f32"),
+                            ("nonres", eng_nr, "pq"),
+                            ("res", eng_r, "residual_pq")):
+        ids = eng.search(q, sigma=-1.0, tier=tier).ids  # warm jit
         t0 = time.perf_counter()
-        eng.search(q, sigma=-1.0, quantized=quantized)
+        eng.search(q, sigma=-1.0, tier=tier)
         times[name] = time.perf_counter() - t0
         recalls[name] = recall_at_k(np.asarray(ids), gti, K)
 

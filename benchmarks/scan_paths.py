@@ -45,10 +45,13 @@ def _engines():
                                     n_modes=B * 2, seed=SEED))
 
     def build():
+        from repro.serving import BuildConfig
+
         eng = LiraEngine.build(
-            make_test_mesh(), ds.base, n_partitions=B, k=K, eta=ETA,
-            train_frac=TRAIN_FRAC, epochs=EPOCHS, nprobe_max=NPROBE,
-            quantized=True, pq_m=PQ_M, pq_ks=PQ_KS, rerank=RERANK)
+            make_test_mesh(), ds.base, BuildConfig(
+                n_partitions=B, k=K, eta=ETA, train_frac=TRAIN_FRAC,
+                epochs=EPOCHS, nprobe_max=NPROBE, tier="pq", pq_m=PQ_M,
+                pq_ks=PQ_KS, rerank=RERANK))
         qs = build_quantized_store(
             jax.random.PRNGKey(1), eng.store["vectors"], eng.store["ids"],
             m=PQ_M, ks=eng.cfg.pq_ks, residual=True,
@@ -59,7 +62,7 @@ def _engines():
     eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=make_test_mesh())
     store_r = {**store, "codes": qs.codes, "codebooks": qs.codebooks,
                "cterm": qs.cterm}
-    eng_r = LiraEngine(cfg=dataclasses.replace(cfg, residual_pq=True),
+    eng_r = LiraEngine(cfg=dataclasses.replace(cfg, tier="residual_pq"),
                        params=params, store=store_r, mesh=eng.mesh)
     return eng, eng_r, ds
 
@@ -68,16 +71,17 @@ def run(emit):
     eng, eng_r, ds = _engines()
     q = ds.queries[:NQ]
     mismatches = []
-    for tier, engine, quantized in (("f32", eng, False),
-                                    ("quantized", eng, True),
-                                    ("residual", eng_r, True)):
+    for tier, engine, tier_name in (("f32", eng, "f32"),
+                                    ("quantized", eng, "pq"),
+                                    ("residual", eng_r, "residual_pq")):
         results = {}
         for impl in ("ref", "interpret"):
-            engine.search(q, sigma=SIGMA, quantized=quantized, impl=impl)  # warm jit
+            engine.search(q, sigma=SIGMA, tier=tier_name, impl=impl)  # warm jit
             t0 = time.perf_counter()
-            d, ids, npb, ovf = engine.search(q, sigma=SIGMA, quantized=quantized,
-                                             impl=impl)
+            res = engine.search(q, sigma=SIGMA, tier=tier_name, impl=impl)
             dt = time.perf_counter() - t0
+            d, ids, npb, ovf = (res.dists, res.ids, res.nprobe_eff,
+                                res.overflow)
             results[impl] = (dt, d, ids, npb, ovf)
             emit(f"scan_paths/{tier}_{impl}", dt * 1e6,
                  f"qps={NQ/dt:.0f};nprobe={npb.mean():.2f};overflow={ovf}")

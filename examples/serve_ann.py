@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.data import make_vector_dataset
 from repro.launch.mesh import make_test_mesh
-from repro.serving import LiraEngine
+from repro.serving import BuildConfig, LiraEngine, SearchRequest
 
 
 def main():
@@ -20,9 +20,9 @@ def main():
 
     print("building LIRA engine (kmeans → probe training → redundancy → store → PQ)…")
     t0 = time.time()
-    engine = LiraEngine.build(mesh, ds.base, n_partitions=32, k=10, eta=0.05,
-                              train_frac=0.4, epochs=5, nprobe_max=8,
-                              quantized=True, pq_m=16, rerank=16, residual=True)
+    engine = LiraEngine.build(mesh, ds.base, BuildConfig(
+        n_partitions=32, k=10, eta=0.05, train_frac=0.4, epochs=5,
+        nprobe_max=8, tier="residual_pq", pq_m=16, rerank=16))
     from repro.serving import scan_store_bytes
 
     sb = scan_store_bytes(engine.store)
@@ -34,17 +34,18 @@ def main():
 
     _, gti = gt.exact_knn(ds.queries, ds.base, 10)
 
-    # both tiers serve from the same engine: codes ride next to the f32 store
-    for tier, quantized in (("f32 exact scan", False),
-                            ("residual PQ/ADC + rerank", True)):
-        engine.search(ds.queries, sigma=0.3, quantized=quantized)  # warm the jit cache
+    # both tiers serve from the same engine: codes ride next to the f32 store,
+    # and a SearchRequest picks which declared tier scans it
+    for label, tier in (("f32 exact scan", "f32"),
+                        ("residual PQ/ADC + rerank", "residual_pq")):
+        req = SearchRequest(queries=ds.queries, sigma=0.3, tier=tier)
+        engine.search(req)  # warm the jit cache
         t0 = time.time()
-        dists, ids, nprobe, overflow = engine.search(ds.queries, sigma=0.3,
-                                                     quantized=quantized)
+        res = engine.search(req)
         dt = time.time() - t0
-        print(f"  [{tier}] {len(ds.queries)/dt:.0f} QPS (1-CPU container); "
-              f"mean nprobe={nprobe.mean():.2f}; dropped probes={overflow}; "
-              f"recall@10={recall_at_k(ids, gti, 10):.3f}")
+        print(f"  [{label}] {len(ds.queries)/dt:.0f} QPS (1-CPU container); "
+              f"mean nprobe={res.nprobe_eff.mean():.2f}; dropped probes="
+              f"{res.overflow}; recall@10={recall_at_k(res.ids, gti, 10):.3f}")
 
 
 if __name__ == "__main__":

@@ -126,6 +126,13 @@ RECSYS_SHAPES: Sequence[ShapeSpec] = (
 )
 
 
+# builtin serving-tier aliases → canonical names. Must mirror the `aliases`
+# declared by the builtin Tier classes in serving/tiers.py (which cannot be
+# imported here without a cycle); tests/test_tiers.py asserts the two agree.
+_TIER_ALIASES = {"quantized": "pq", "residual": "residual_pq",
+                 "exact": "f32", "float32": "f32"}
+
+
 @dataclasses.dataclass(frozen=True)
 class LiraSystemConfig:
     """The paper's own system as a lowerable architecture."""
@@ -141,19 +148,49 @@ class LiraSystemConfig:
     dtype: str = "float32"
     store_dtype: str = "float32"    # vector storage (bfloat16 halves scan reads)
     q_cap_factor: float = 2.0       # query-dispatch slack (compute ∝ this)
+    auto_q_cap: bool = False        # engine doubles q_cap_factor (and recompiles
+                                    # on the next bucket) after persistent
+                                    # q_cap overflow
     impl: str = "auto"              # partition-scan backend (serving/scan.py):
                                     # auto (pallas on TPU, ref elsewhere) | ref
                                     # (portable jnp) | pallas (fused kernels) |
                                     # interpret (kernels via the interpreter)
-    # quantized two-stage tier (serving/quantized.py): PQ/ADC shortlist over
-    # uint8 codes, exact f32 rerank of the r·k shortlist
-    quantized: bool = False
+    # serving tier (serving/tiers.py registry): "f32" exact scan | "pq"
+    # ADC shortlist + exact rerank | "residual_pq" PQ over x − centroid |
+    # any registered custom tier. "" (legacy) derives the tier from the
+    # deprecated booleans below.
+    tier: str = ""
     pq_m: int = 16                  # PQ subspaces (dim % pq_m == 0)
     pq_ks: int = 256                # codewords/subspace (≤ 256 → uint8 codes)
     rerank: int = 4                 # shortlist depth r: rerank r·k per partition
-    residual_pq: bool = False       # encode x − centroid (clustered-data win);
-                                    # adds a per-slot f32 cterm plane + per-
-                                    # (query, partition) offset to the scan
+    # DEPRECATED read-only aliases of `tier`, kept one release for legacy
+    # callers. When `tier` is set they are (re)derived from it in
+    # __post_init__, so dataclasses.replace(cfg, quantized=...) on a cfg whose
+    # tier is already resolved is a no-op — replace `tier` instead.
+    quantized: bool = False         # alias: tier in ("pq", "residual_pq")
+    residual_pq: bool = False       # alias: tier == "residual_pq"
+
+    def __post_init__(self):
+        if not self.tier:
+            # legacy semantics preserved exactly: residual was a mode OF the
+            # quantized tier (residual_pq alone used to serve the plain f32
+            # scan), so it only selects residual_pq when quantized is set too
+            object.__setattr__(
+                self, "tier",
+                "residual_pq" if (self.quantized and self.residual_pq)
+                else ("pq" if self.quantized else "f32"))
+        else:
+            # canonicalize builtin aliases so the derived booleans (and any
+            # tier-name comparison downstream) can't be fooled by e.g.
+            # tier="residual" — serving/tiers.py registers these same aliases
+            # and tests/test_tiers.py pins the two maps together
+            object.__setattr__(self, "tier",
+                               _TIER_ALIASES.get(self.tier, self.tier))
+        # both aliases re-derive from the resolved tier in every case, so
+        # they are always self-consistent with it
+        object.__setattr__(self, "quantized",
+                           self.tier in ("pq", "residual_pq"))
+        object.__setattr__(self, "residual_pq", self.tier == "residual_pq")
 
 
 LIRA_SHAPES: Sequence[ShapeSpec] = (

@@ -10,15 +10,14 @@ CONFIG = LiraSystemConfig(
 )
 SHAPES = LIRA_SHAPES
 
-# quantized two-stage tier: uint8 PQ codes (m=16, ks=256 → 16 B/slot vs 512 B
-# f32 = 32× smaller scan store), exact f32 rerank of the r·k shortlist.
-# residual_pq: codes encode x − centroid (the full budget goes to the within-
-# partition residual — the win on clustered stores), at the cost of a per-slot
-# f32 cterm plane (+4 B/slot) and a per-(query, partition) offset in the scan.
+# residual_pq tier: uint8 PQ codes (m=16, ks=256 → 16 B/slot vs 512 B f32 =
+# 32× smaller scan store), exact f32 rerank of the r·k shortlist; the codes
+# encode x − centroid (the full budget goes to the within-partition residual —
+# the win on clustered stores), at the cost of a per-slot f32 cterm plane
+# (+4 B/slot) and a per-(query, partition) offset in the scan.
 CONFIG_QUANTIZED = LiraSystemConfig(
     arch="lira-ann-q", dim=128, n_partitions=1024, capacity=65536, k=100,
-    nprobe_max=64, quantized=True, pq_m=16, pq_ks=256, rerank=4,
-    residual_pq=True,
+    nprobe_max=64, tier="residual_pq", pq_m=16, pq_ks=256, rerank=4,
 )
 
 SMOKE = LiraSystemConfig(
@@ -28,8 +27,7 @@ SMOKE = LiraSystemConfig(
 
 SMOKE_QUANTIZED = LiraSystemConfig(
     arch="lira-smoke-q", dim=16, n_partitions=16, capacity=64, k=10,
-    nprobe_max=4, quantized=True, pq_m=2, pq_ks=16, rerank=4,
-    residual_pq=True,
+    nprobe_max=4, tier="residual_pq", pq_m=2, pq_ks=16, rerank=4,
 )
 SMOKE_SHAPES = (ShapeSpec("serve_sm", "lira_serve", {"n_queries": 64}),
                 ShapeSpec("train_sm", "lira_train", {"batch": 64}))

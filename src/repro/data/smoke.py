@@ -54,7 +54,13 @@ def make_smoke_inputs(config, shape, mesh, seed: int = 0):
 
     if isinstance(config, LiraSystemConfig):
         if shape.kind == "lira_serve":
+            # the serving tier declares which store planes exist (and their
+            # dtypes) — iterate its specs so registry-driven smoke inputs
+            # track new tiers with zero edits here
+            from repro.serving.engine import store_specs
+
             nq = shape["n_queries"]
+            specs = store_specs(config)
             vecs = host.normal(0, 1, (config.n_partitions, config.capacity, config.dim)).astype(np.float32)
             ids = np.arange(config.n_partitions * config.capacity, dtype=np.int32).reshape(
                 config.n_partitions, config.capacity)
@@ -62,23 +68,21 @@ def make_smoke_inputs(config, shape, mesh, seed: int = 0):
             ids[:, -max(1, config.capacity // 8):] = -1
             store = {
                 "centroids": jnp.asarray(vecs.mean(1)),
-                "vectors": jnp.asarray(vecs),
+                "vectors": jnp.asarray(vecs, specs["vectors"].dtype),
                 "ids": jnp.asarray(ids),
             }
-            if getattr(config, "quantized", False):
-                from repro.core.pq import code_dtype
-
-                store["codes"] = jnp.asarray(host.integers(
-                    0, config.pq_ks,
-                    (config.n_partitions, config.capacity, config.pq_m),
-                ).astype(code_dtype(config.pq_ks)))
-                store["codebooks"] = jnp.asarray(host.normal(
-                    0, 1, (config.pq_m, config.pq_ks, config.dim // config.pq_m),
-                ).astype(np.float32))
-                if getattr(config, "residual_pq", False):
-                    store["cterm"] = jnp.asarray(host.normal(
-                        0, 1, (config.n_partitions, config.capacity),
-                    ).astype(np.float32))
+            for name, spec in specs.items():
+                if name in store:
+                    continue
+                if name == "codes":  # PQ codewords, bounded by pq_ks
+                    store[name] = jnp.asarray(host.integers(
+                        0, config.pq_ks, spec.shape).astype(spec.dtype))
+                elif jnp.issubdtype(spec.dtype, jnp.integer):
+                    store[name] = jnp.zeros(spec.shape, spec.dtype)
+                else:
+                    store[name] = jnp.asarray(
+                        host.normal(0, 1, spec.shape).astype(np.float32),
+                        spec.dtype)
             return {"store": store,
                     "queries": jnp.asarray(host.normal(0, 1, (nq, config.dim)).astype(np.float32))}
         if shape.kind == "lira_train":

@@ -14,7 +14,7 @@ import numpy as np
 from repro.data import make_vector_dataset
 from repro.distributed.fault import ReplicaRouter, StragglerMitigator
 from repro.launch.mesh import make_test_mesh
-from repro.serving import LiraEngine
+from repro.serving import BuildConfig, LiraEngine, SearchRequest, tiers
 
 
 def main():
@@ -24,13 +24,19 @@ def main():
     ap.add_argument("--partitions", type=int, default=32)
     ap.add_argument("--sigma", type=float, default=0.3)
     ap.add_argument("--pods", type=int, default=2, help="simulated index replicas")
+    ap.add_argument("--tier", default="f32", choices=tiers.names(),
+                    help="serving tier (serving/tiers.py registry): f32 exact "
+                         "scan | pq ADC shortlist + exact rerank | residual_pq "
+                         "PQ over x − centroid with per-partition LUT offsets")
     ap.add_argument("--quantized", action="store_true",
-                    help="serve through the PQ/ADC shortlist + exact-rerank tier")
+                    help="DEPRECATED: use --tier pq")
+    ap.add_argument("--residual", action="store_true",
+                    help="DEPRECATED: use --tier residual_pq")
     ap.add_argument("--rerank", type=int, default=8,
                     help="quantized shortlist depth r (rerank r·k per partition)")
-    ap.add_argument("--residual", action="store_true",
-                    help="residual PQ: encode x − centroid with per-partition "
-                         "LUT offsets (implies --quantized)")
+    ap.add_argument("--auto-q-cap", action="store_true",
+                    help="double q_cap_factor (and recompile) after persistent "
+                         "dispatch-bucket overflow")
     ap.add_argument("--impl", default="auto",
                     choices=("auto", "ref", "pallas", "interpret"),
                     help="partition-scan backend (serving/scan.py): auto picks "
@@ -38,29 +44,33 @@ def main():
                          "elsewhere; interpret forces the kernels through the "
                          "Pallas interpreter for parity checks")
     args = ap.parse_args()
-    args.quantized = args.quantized or args.residual
+    tier = args.tier
+    if args.quantized or args.residual:
+        tier = tiers.legacy_tier_name(args.quantized, args.residual)
+        print(f"--quantized/--residual are deprecated; use --tier {tier}")
 
     ds = make_vector_dataset(n=args.n, n_queries=args.queries, dim=64, n_modes=64, seed=4)
     mesh = make_test_mesh()
     print("building index…")
-    engine = LiraEngine.build(mesh, ds.base, n_partitions=args.partitions, k=10,
-                              eta=0.05, train_frac=0.4, epochs=5,
-                              quantized=args.quantized, rerank=args.rerank,
-                              residual=args.residual, impl=args.impl)
-    if args.quantized:
+    engine = LiraEngine.build(mesh, ds.base, BuildConfig(
+        n_partitions=args.partitions, k=10, eta=0.05, train_frac=0.4, epochs=5,
+        tier=tier, rerank=args.rerank, impl=args.impl,
+        auto_q_cap=args.auto_q_cap))
+    if tier != "f32":
         from repro.serving import scan_store_bytes
 
         sb = scan_store_bytes(engine.store)
-        mode = "residual" if args.residual else "non-residual"
-        print(f"  quantized tier ({mode}): m={engine.cfg.pq_m} ks={engine.cfg.pq_ks} "
+        print(f"  {tier} tier: m={engine.cfg.pq_m} ks={engine.cfg.pq_ks} "
               f"rerank={engine.cfg.rerank}; scan store x{sb['ratio']:.1f} smaller")
 
     print(f"serving {args.queries} queries…")
     t0 = time.time()
-    d, ids, nprobe, overflow = engine.search(ds.queries, sigma=args.sigma)
+    res = engine.search(SearchRequest(queries=ds.queries, sigma=args.sigma))
     dt = time.time() - t0
-    print(f"  {args.queries/dt:.0f} QPS local; adaptive nprobe mean={nprobe.mean():.2f}; "
-          f"dropped probes (q_cap overflow)={overflow}")
+    print(f"  {args.queries/dt:.0f} QPS local; adaptive nprobe "
+          f"mean={res.nprobe_eff.mean():.2f}; dropped probes (q_cap overflow)="
+          f"{res.overflow}; bucket={res.stats.bucket} "
+          f"cache_hit={res.stats.cache_hit}")
 
     # multi-pod control plane: route batches over replicas, kill one mid-stream
     router = ReplicaRouter(args.pods)

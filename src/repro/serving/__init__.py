@@ -1,3 +1,10 @@
 from repro.serving import scan  # noqa: F401  (backend-dispatched partition scan)
+from repro.serving import tiers  # noqa: F401  (serving-tier registry)
+from repro.serving.api import (  # noqa: F401  (typed serving surface)
+    BuildConfig,
+    SearchRequest,
+    SearchResult,
+    SearchStats,
+)
 from repro.serving.engine import make_bundle, LiraEngine  # noqa: F401
 from repro.serving.quantized import QuantizedStore, build_quantized_store, scan_store_bytes  # noqa: F401

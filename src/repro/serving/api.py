@@ -1,0 +1,142 @@
+"""Typed serving surface: SearchRequest → LiraEngine.search → SearchResult.
+
+This module is the stable contract production callers program against while
+storage/quantization strategies evolve underneath (serving/tiers.py) — the
+HARMONY / LANNS split of "serving API" from "index internals":
+
+  * ``BuildConfig``    — the index-build recipe ``LiraEngine.build`` consumes
+    instead of a ~14-kwarg pile;
+  * ``SearchRequest``  — one query batch + per-call overrides (k, σ, tier,
+    scan impl); anything left None inherits the engine's config;
+  * ``SearchResult``   — named result fields plus per-call ``SearchStats``
+    (which jit-cache bucket served the batch, whether it was a cache hit),
+    replacing the positional 4-tuple that changed shape in PR 4 and broke
+    every caller.
+
+Deprecation shims (one release): unpacking a ``SearchResult`` as the legacy
+``(dists, ids, nprobe_eff, overflow)`` tuple still works but warns once per
+result object, and the retired ``quantized=`` / ``residual=`` boolean knobs on
+``LiraEngine.build`` / ``search`` warn once per process (see
+``warn_deprecated`` / ``reset_deprecation_warnings``). CI runs the tier-1
+suite with ``-W error::DeprecationWarning`` so internal code can never grow
+back onto the deprecated surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Optional
+
+import numpy as np
+
+# ------------------------------------------------------------- deprecation
+
+_WARNED: set[str] = set()
+
+
+def warn_deprecated(key: str, message: str, *, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning`` once per process per ``key`` — repeated use
+    of one legacy surface doesn't spam, while ``-W error::DeprecationWarning``
+    still trips on the first internal use."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_deprecation_warnings() -> None:
+    """Re-arm the once-per-process guards (test isolation)."""
+    _WARNED.clear()
+
+
+# ------------------------------------------------------------------- build
+
+@dataclasses.dataclass(frozen=True)
+class BuildConfig:
+    """Everything ``LiraEngine.build`` needs beyond the data itself. Fields
+    mirror LiraSystemConfig knobs where one exists; the rest are build-time
+    only (η, training schedule, seed)."""
+
+    n_partitions: int
+    k: int = 100
+    eta: float = 0.03               # replica redundancy rate (paper §3.3)
+    train_frac: float = 0.5         # fraction of base vectors used to train probing
+    epochs: int = 8
+    nprobe_max: Optional[int] = None  # None → max(8, n_partitions // 8)
+    seed: int = 0
+    log: bool = False
+    tier: str = "f32"               # serving tier (serving/tiers.py registry)
+    pq_m: Optional[int] = None      # None → largest divisor of dim ≤ 16
+    pq_ks: int = 256
+    rerank: int = 4
+    impl: str = "auto"              # partition-scan backend (serving/scan.py)
+    store_dtype: str = "float32"    # f32 vector plane dtype (bfloat16 halves scan reads)
+    q_cap_factor: float = 2.0
+    auto_q_cap: bool = False        # grow q_cap_factor on persistent overflow
+    sigma: float = 0.5              # engine's default probe threshold
+
+
+# ------------------------------------------------------------------ search
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One query batch + per-call overrides. ``None`` inherits the engine
+    config: tier defaults to the tier the engine was built for, k/σ/impl to
+    ``cfg.k`` / ``engine.sigma`` / ``cfg.impl``."""
+
+    queries: Any                    # [nq, dim] array-like
+    k: Optional[int] = None
+    sigma: Optional[float] = None
+    tier: Optional[str] = None
+    impl: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchStats:
+    """Per-call serving telemetry (not part of the ranked answer)."""
+
+    tier: str                       # resolved tier that served the call
+    impl: str                       # resolved scan backend
+    k: int
+    sigma: float
+    bucket: int                     # padded power-of-two jit-cache batch bucket
+    cache_hit: bool                 # False = this call compiled a serve step
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Named serving answer. ``overflow`` counts probes dropped by q_cap
+    bucket overflow — persistently nonzero means recall is degraded; raise
+    ``q_cap_factor`` or set ``auto_q_cap=True`` to let the engine do it.
+
+    Legacy shim: iterating/indexing yields the retired 4-tuple
+    ``(dists, ids, nprobe_eff, overflow)`` with a one-time DeprecationWarning
+    per result, so pre-redesign unpacking keeps working for one release.
+    """
+
+    dists: np.ndarray               # [nq, k] ascending squared L2, inf-padded
+    ids: np.ndarray                 # [nq, k] point ids, -1-padded
+    nprobe_eff: np.ndarray          # [nq] effective probes per query
+    overflow: int                   # total q_cap-dropped probes this call
+    stats: Optional[SearchStats] = None
+
+    _tuple_warned: bool = dataclasses.field(
+        default=False, repr=False, compare=False)
+
+    def _legacy_tuple(self):
+        if not self._tuple_warned:
+            self._tuple_warned = True
+            warnings.warn(
+                "unpacking SearchResult as a (dists, ids, nprobe_eff, overflow) "
+                "tuple is deprecated; use the named fields",
+                DeprecationWarning, stacklevel=3)
+        return (self.dists, self.ids, self.nprobe_eff, self.overflow)
+
+    def __iter__(self):
+        return iter(self._legacy_tuple())
+
+    def __getitem__(self, idx):
+        return self._legacy_tuple()[idx]
+
+    def __len__(self) -> int:
+        return 4

@@ -21,26 +21,29 @@ serve_step:
      portable jnp path under lax.map; "pallas" runs the fused kernels
      grid-batched over the whole [b_loc, q_cap] dispatch buffer in one launch
      (kernels.l2_topk_batched for f32; native on TPU, interpreted elsewhere).
-     With cfg.quantized the scan is two-stage: per-query ADC LUT (computed
-     once) → PQ-code shortlist of r·k candidates (kernels.pq_adc_topk_batched
-     on the kernel path) → exact f32 rerank of the shortlist only, cutting
-     the dominant vector-read traffic 8–32× (serving/quantized.py). With
-     cfg.residual_pq the codes encode x − centroid and the scan adds the two
-     scalar corrections of the residual ADC identity (core/pq.py): a
-     precomputed per-slot cterm plane plus a per-(query, partition) offset
-     derived from the probing cd matrix — threaded to the kernels as their
-     cand_off/q_off operands;
+     WHAT is scanned is declared by the serving tier (serving/tiers.py): the
+     engine resolves cfg.tier from the registry and iterates the tier's store
+     field + scan operand declarations — it never branches on tier-specific
+     booleans, so a new storage/quantization strategy is one registered Tier
+     class with zero edits here. The "pq" tier threads a shared ADC LUT +
+     shortlist depth (two-stage scan, serving/quantized.py); "residual_pq"
+     adds the residual ADC identity's cterm plane and per-(query, partition)
+     offsets (core/pq.py);
   5. scatter back per query, local top-k, all-gather(k·shards) over "model",
      final merge. Collective volume is O(Q·k), independent of N.
 
 Multi-pod: each pod holds a full index replica; the front-end routes query
 batches to pods (repro.distributed.fault simulates replica failover).
+
+Host-side callers use the typed surface in serving/api.py: LiraEngine.build
+takes a BuildConfig, search takes queries or a SearchRequest and returns a
+SearchResult (the legacy 4-tuple unpacking survives one release behind a
+DeprecationWarning shim).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Optional
 
 import jax
@@ -54,8 +57,9 @@ from repro.kernels import ops as kops
 from repro.models.api import ModelBundle, StepDef, adamw_state_pspecs, adamw_state_specs, sds
 from repro.train import optimizer as opt
 
-from repro.serving import quantized as quantized_tier
+from repro.serving import api
 from repro.serving import scan
+from repro.serving import tiers
 from repro.utils.compat import shard_map
 
 
@@ -76,59 +80,48 @@ def probing_param_specs(cfg: LiraSystemConfig):
 
 
 def store_specs(cfg: LiraSystemConfig):
-    b, c, d = cfg.n_partitions, cfg.capacity, cfg.dim
-    specs = {
-        "centroids": sds((b, d)),
-        "vectors": sds((b, c, d), jnp.dtype(getattr(cfg, "store_dtype", "float32"))),
-        "ids": sds((b, c), jnp.int32),
-    }
-    if getattr(cfg, "quantized", False):
-        from repro.core.pq import code_dtype
-
-        specs["codes"] = sds((b, c, cfg.pq_m), jnp.dtype(code_dtype(cfg.pq_ks)))
-        specs["codebooks"] = sds((cfg.pq_m, cfg.pq_ks, d // cfg.pq_m))
-        if getattr(cfg, "residual_pq", False):
-            specs["cterm"] = sds((b, c))  # per-slot residual cross terms
-    return specs
+    """Store field shape specs for cfg's serving tier — a pure delegation to
+    the tier registry (serving/tiers.py declares WHAT each tier stores)."""
+    return tiers.resolve(cfg.tier).store_specs(cfg)
 
 
 def store_pspecs(mesh, cfg: LiraSystemConfig | None = None):
-    sp = {
-        "centroids": P(None, None),
-        "vectors": P("model", None, None),
-        "ids": P("model", None),
-    }
-    if cfg is not None and getattr(cfg, "quantized", False):
-        sp["codes"] = P("model", None, None)   # codes shard with their vectors
-        sp["codebooks"] = P(None, None, None)  # replicated like centroids
-        if getattr(cfg, "residual_pq", False):
-            sp["cterm"] = P("model", None)     # rides with its codes
-    return sp
+    """Mesh PartitionSpecs per store field; cfg=None means the base f32 tier.
+    (mesh is unused — pspecs name axes symbolically; the parameter is kept
+    only so existing callers' signatures stay valid.)"""
+    del mesh
+    tier = tiers.resolve(cfg.tier if cfg is not None else "f32")
+    return tier.store_pspecs(cfg)
 
 
 # ------------------------------------------------------------- serve step
 
 def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float = 0.5,
                     q_cap_factor: float | None = None,
-                    quantized: bool | None = None,
-                    impl: str | None = None):
+                    tier: str | tiers.Tier | None = None,
+                    impl: str | None = None,
+                    k: int | None = None):
     _, bspec, bprod = batch_mesh_info(mesh)
     model_n = mesh.shape.get("model", 1)
     q_row = n_queries // bprod
     b_loc = cfg.n_partitions // model_n
     q_cap_factor = q_cap_factor if q_cap_factor is not None else getattr(cfg, "q_cap_factor", 2.0)
     q_cap = max(8, int(q_row * cfg.nprobe_max / cfg.n_partitions * q_cap_factor))
-    k = cfg.k
-    quantized = getattr(cfg, "quantized", False) if quantized is None else quantized
-    residual = quantized and getattr(cfg, "residual_pq", False)
+    k = cfg.k if k is None else int(k)
+    tier = tiers.resolve(tier if tier is not None else cfg.tier)
     impl = getattr(cfg, "impl", "auto") if impl is None else impl
     scan_impl = scan.resolve_impl(impl)  # fail fast on typos, not at trace time
+    # the tier declares its store fields; everything beyond the probing /
+    # dispatch / rerank operands (BASE_FIELDS) is threaded through untouched
+    # and handed back to the tier when it assembles the scan operands
+    pspec_map = tier.store_pspecs(cfg)
+    extra_fields = tuple(n for n in tier.store_specs(cfg)
+                         if n not in tiers.BASE_FIELDS)
 
-    def f(q_loc, valid_loc, params, cents, vecs_loc, ids_loc, *qargs):
+    def f(q_loc, valid_loc, params, cents, vecs_loc, ids_loc, *extras):
         # q_loc: [q_row, d]; valid_loc: [q_row] bool (False = batch padding);
         # vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
-        # qargs (quantized only): codes_loc [b_loc, cap, m], codebooks
-        # [m, ks, d_sub] (+ cterm_loc [b_loc, cap] in residual mode)
+        # extras: the tier's non-base store fields, in declaration order
         cd = (
             jnp.sum(q_loc * q_loc, -1, keepdims=True)
             - 2.0 * q_loc @ cents.T
@@ -162,39 +155,15 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         qbuf = jnp.full((b_loc, q_cap), q_row, jnp.int32).at[row, col].set(
             flat_q[order], mode="drop")                              # q_row = invalid
 
-        # ---- per-partition scan: backend-dispatched (serving/scan.py)
+        # ---- per-partition scan: backend-dispatched (serving/scan.py); the
+        # tier derives its extra scan operands (ADC LUTs, shortlist depth,
+        # residual offsets, …) from the serve-step context — {} = plain f32
         q_pad = jnp.concatenate([q_loc, jnp.full((1, q_loc.shape[1]), 1e9, q_loc.dtype)], 0)
-
-        if quantized:
-            if residual:
-                codes_loc, codebooks, cterm_loc = qargs
-            else:
-                codes_loc, codebooks = qargs
-                cterm_loc = None
-            m = codes_loc.shape[-1]
-            cap = vecs_loc.shape[1]
-            rk = min(cap, max(k, int(getattr(cfg, "rerank", 4)) * k))
-            # stage 0: per-query ADC LUT, once — valid across all partitions.
-            # Non-residual codebooks make this exact; residual codebooks make
-            # it exact up to the two scalar corrections of the residual ADC
-            # identity (core/pq.py), added inside the scan stage.
-            lut_pad = jnp.concatenate(
-                [quantized_tier.adc_lut(codebooks, q_loc),
-                 jnp.zeros((1, m, codebooks.shape[1]), jnp.float32)], 0)
-            off_loc = None
-            if residual:
-                # ‖c_b‖² − 2⟨q, c_b⟩ = cd − ‖q‖², per (query, partition); the
-                # centroid-distance matrix cd is already here for probing.
-                off = cd - jnp.sum(q_loc * q_loc, -1, keepdims=True)   # [q_row, B]
-                off_pad = jnp.concatenate(
-                    [off, jnp.zeros((1, off.shape[1]), off.dtype)], 0)
-                off_loc = jax.lax.dynamic_slice_in_dim(
-                    off_pad, b0, b_loc, axis=1).T                      # [b_loc, q_row+1]
-            dists, rids = scan.run(scan_impl, qbuf, q_pad, vecs_loc, ids_loc, k,
-                                   lut_pad=lut_pad, codes_loc=codes_loc, rk=rk,
-                                   cterm_loc=cterm_loc, off_loc=off_loc)
-        else:
-            dists, rids = scan.run(scan_impl, qbuf, q_pad, vecs_loc, ids_loc, k)
+        ctx = tiers.ScanContext(q_loc=q_loc, q_pad=q_pad, cd=cd, b0=b0,
+                                b_loc=b_loc, k=k)
+        scan_kw = tier.scan_kwargs(cfg, ctx, dict(zip(extra_fields, extras)))
+        dists, rids = scan.run(scan_impl, qbuf, q_pad, vecs_loc, ids_loc, k,
+                               **scan_kw)
 
         # ---- scatter back per query, local merge
         out_d = jnp.full((q_row + 1, b_loc, k), jnp.inf, jnp.float32)
@@ -220,22 +189,15 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         return loc_d, loc_i, nprobe_eff, overflow[None]
 
     param_spec = jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg))
-    in_specs = (P(bspec, None), P(bspec), param_spec, P(None, None),
-                P("model", None, None), P("model", None))
-    if quantized:
-        in_specs = in_specs + (P("model", None, None), P(None, None, None))
-        if residual:
-            in_specs = in_specs + (P("model", None),)
+    in_specs = (P(bspec, None), P(bspec), param_spec,
+                pspec_map["centroids"], pspec_map["vectors"], pspec_map["ids"],
+                *(pspec_map[n] for n in extra_fields))
 
     def serve_step(params, store, queries, valid=None):
         if valid is None:
             valid = jnp.ones((n_queries,), jnp.bool_)
         args = (queries, valid, params, store["centroids"], store["vectors"],
-                store["ids"])
-        if quantized:
-            args = args + (store["codes"], store["codebooks"])
-            if residual:
-                args = args + (store["cterm"],)
+                store["ids"], *(store[n] for n in extra_fields))
         return shard_map(
             f, mesh=mesh,
             in_specs=in_specs,
@@ -333,12 +295,19 @@ def make_bundle(cfg: LiraSystemConfig, mesh) -> ModelBundle:
 @dataclasses.dataclass
 class LiraEngine:
     """End-to-end host-driven engine: build (k-means → train probe → redundancy
-    → store [→ PQ codes]) then serve batches via the distributed serve_step.
+    → tier store construction) then serve batches via the distributed
+    serve_step. The typed surface lives in serving/api.py — ``build`` takes a
+    BuildConfig, ``search`` takes queries or a SearchRequest and returns a
+    SearchResult; which store planes exist and what the scan reads is declared
+    by the serving tier (serving/tiers.py).
 
-    Jitted serve steps are cached per (padded batch size, σ, tier, scan impl):
+    Jitted serve steps are cached per (bucket, σ, tier, impl, k, q_cap) key:
     query batches are padded to power-of-two buckets so repeated traffic of
     varying size hits the jit cache instead of recompiling every call, and the
     pad rows are masked out of dispatch (they never probe or take q_cap slots).
+    With ``cfg.auto_q_cap`` the engine doubles ``q_cap_factor`` after
+    ``_AUTO_Q_CAP_AFTER`` consecutive overflowing calls and drops the cache,
+    so the next bucket recompiles with the extra dispatch slack.
     """
 
     cfg: LiraSystemConfig
@@ -348,60 +317,78 @@ class LiraEngine:
     sigma: float = 0.5
     _serve_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                            compare=False)
+    _overflow_streak: int = dataclasses.field(default=0, repr=False,
+                                              compare=False)
 
     @classmethod
-    def build(cls, mesh, x: np.ndarray, *, n_partitions: int, k: int = 100,
-              eta: float = 0.03, train_frac: float = 0.5, epochs: int = 8,
-              nprobe_max: Optional[int] = None, seed: int = 0, log: bool = False,
-              quantized: bool = False, pq_m: Optional[int] = None,
-              pq_ks: int = 256, rerank: int = 4, residual: bool = False,
-              impl: str = "auto"):
+    def build(cls, mesh, x: np.ndarray, config: api.BuildConfig | None = None,
+              **legacy_kwargs):
+        """Build an index over ``x`` per the BuildConfig recipe.
+
+        Legacy surface (one release): keyword arguments matching BuildConfig
+        fields are still accepted when no config object is given, and the
+        retired ``quantized=`` / ``residual=`` booleans map onto ``tier=``
+        with a DeprecationWarning.
+        """
         from repro.core import build_store, ground_truth as gt, kmeans_fit
         from repro.core.redundancy import plan_redundancy, replica_rows
         from repro.core.train_probing import train_probing_model
 
-        quantized = quantized or residual  # residual is a mode OF the PQ tier
-        rng = jax.random.PRNGKey(seed)
-        host = np.random.default_rng(seed)
+        if "quantized" in legacy_kwargs or "residual" in legacy_kwargs:
+            api.warn_deprecated(
+                "build-tier-kwargs",
+                "LiraEngine.build(quantized=, residual=) is deprecated; pass "
+                "BuildConfig(tier='pq') / BuildConfig(tier='residual_pq')")
+            residual = bool(legacy_kwargs.pop("residual", False))
+            quantized = bool(legacy_kwargs.pop("quantized", False))
+            legacy_kwargs.setdefault(
+                "tier", tiers.legacy_tier_name(quantized, residual))
+        if config is None:
+            config = api.BuildConfig(**legacy_kwargs)
+        elif legacy_kwargs:
+            raise TypeError("pass either a BuildConfig or keyword arguments, "
+                            f"not both (got {sorted(legacy_kwargs)})")
+
+        tier = tiers.resolve(config.tier)
+        rng = jax.random.PRNGKey(config.seed)
+        host = np.random.default_rng(config.seed)
+        n_partitions = config.n_partitions
         st = kmeans_fit(rng, jnp.asarray(x), n_clusters=n_partitions, n_iters=20)
         assign, cents = np.asarray(st.assign), np.asarray(st.centroids)
 
-        sub = host.choice(len(x), int(len(x) * train_frac), replace=False)
+        sub = host.choice(len(x), int(len(x) * config.train_frac), replace=False)
         xs = x[sub]
-        _, sti = gt.exact_knn(xs, xs, k, exclude_self=True)
+        _, sti = gt.exact_knn(xs, xs, config.k, exclude_self=True)
         part_of = assign[sub]
         lab = np.zeros((len(sub), n_partitions), np.float32)
         rows = np.repeat(np.arange(len(sub)), sti.shape[1])
         np.add.at(lab, (rows, part_of[sti].reshape(-1)), 1.0)
         lab = (lab > 0).astype(np.float32)
-        params, _ = train_probing_model(rng, xs, lab, cents, epochs=epochs, log=log)
+        params, _ = train_probing_model(rng, xs, lab, cents,
+                                        epochs=config.epochs, log=config.log)
 
         ids = np.arange(len(x), dtype=np.int32)
-        plan = plan_redundancy(params, x, assign, cents, eta=eta)
+        plan = plan_redundancy(params, x, assign, cents, eta=config.eta)
         extra = replica_rows(plan, x, ids)
         store_h = build_store(x, ids, assign, cents, extra=extra)
-        store = {"centroids": store_h.centroids, "vectors": store_h.vectors,
-                 "ids": store_h.ids}
         dim = x.shape[1]
-        if quantized:
-            # largest divisor of dim ≤ 16 (subspaces must tile the dim exactly)
-            pq_m = pq_m or max(m for m in range(1, min(16, dim) + 1) if dim % m == 0)
-            qs = quantized_tier.build_quantized_store(
-                jax.random.fold_in(rng, 1), store_h.vectors, store_h.ids,
-                m=pq_m, ks=pq_ks, residual=residual,
-                centroids=store_h.centroids if residual else None)
-            store["codes"], store["codebooks"] = qs.codes, qs.codebooks
-            if residual:
-                store["cterm"] = qs.cterm
-            pq_ks = qs.ks  # may have been clamped for tiny stores
         cfg = LiraSystemConfig(
             arch="lira", dim=dim, n_partitions=n_partitions,
-            capacity=store_h.capacity, k=k,
-            nprobe_max=min(n_partitions, nprobe_max or max(8, n_partitions // 8)),
-            quantized=quantized, pq_m=pq_m or 16, pq_ks=pq_ks, rerank=rerank,
-            residual_pq=quantized and residual, impl=impl,
+            capacity=store_h.capacity, k=config.k,
+            nprobe_max=min(n_partitions,
+                           config.nprobe_max or max(8, n_partitions // 8)),
+            tier=tier.name, pq_m=config.pq_m or 0, pq_ks=config.pq_ks,
+            rerank=config.rerank, impl=config.impl,
+            store_dtype=config.store_dtype, q_cap_factor=config.q_cap_factor,
+            auto_q_cap=config.auto_q_cap,
         )
-        return cls(cfg=cfg, params=params, store=store, mesh=mesh)
+        # the tier owns store construction (and may amend cfg: PQ resolves
+        # pq_m, clamps pq_ks for tiny stores)
+        store, cfg = tier.build_store(jax.random.fold_in(rng, 1), cfg, store_h)
+        if not cfg.pq_m:  # tiers without PQ leave the knob at its default
+            cfg = dataclasses.replace(cfg, pq_m=16)
+        return cls(cfg=cfg, params=params, store=store, mesh=mesh,
+                   sigma=config.sigma)
 
     def _batch_bucket(self, nq: int) -> int:
         """Pad batch sizes to power-of-two buckets (≥8, rounded up to a
@@ -412,43 +399,74 @@ class LiraEngine:
         return -(-bucket // bprod) * bprod
 
     _SERVE_CACHE_MAX = 32  # σ sweeps must not accumulate compiled steps forever
+    _AUTO_Q_CAP_AFTER = 2  # consecutive overflowing calls before a bump
 
-    def serve_fn(self, nq_pad: int, sigma: float, quantized: bool,
-                 impl: Optional[str] = None):
-        """The cached jitted serve step for one (bucket, σ, tier, impl) key."""
+    def serve_fn(self, nq_pad: int, sigma: float, tier: str = "f32",
+                 impl: Optional[str] = None, k: Optional[int] = None):
+        """The cached jitted serve step for one (bucket, σ, tier, impl, k,
+        q_cap) key. Returns (fn, cache_hit, resolved_impl)."""
         # normalize before keying: None, "auto" and the resolved backend name
-        # must share one compiled step
+        # must share one compiled step; ditto tier aliases and k=None
         impl = scan.resolve_impl(
             impl if impl is not None else getattr(self.cfg, "impl", "auto"))
-        key = (nq_pad, float(sigma), bool(quantized), impl)
+        tier = tiers.resolve(tier).name
+        k = self.cfg.k if k is None else int(k)
+        key = (nq_pad, float(sigma), tier, impl, k,
+               float(self.cfg.q_cap_factor))
         fn = self._serve_cache.pop(key, None)
+        cache_hit = fn is not None
         if fn is None:
             fn = jax.jit(make_serve_step(self.cfg, self.mesh, nq_pad,
-                                         sigma=float(sigma), quantized=quantized,
-                                         impl=impl))
+                                         sigma=float(sigma), tier=tier,
+                                         impl=impl, k=k))
         self._serve_cache[key] = fn  # re-insert: dict order doubles as LRU
         while len(self._serve_cache) > self._SERVE_CACHE_MAX:
             self._serve_cache.pop(next(iter(self._serve_cache)))
-        return fn
+        return fn, cache_hit, impl
 
-    def search(self, queries: np.ndarray, sigma: Optional[float] = None,
-               quantized: Optional[bool] = None, impl: Optional[str] = None):
-        """Returns (dists [nq, k], ids [nq, k], nprobe_eff [nq], overflow).
+    def search(self, queries, sigma: Optional[float] = None,
+               quantized: Optional[bool] = None, impl: Optional[str] = None,
+               *, tier: Optional[str] = None,
+               k: Optional[int] = None) -> api.SearchResult:
+        """Serve one query batch; see serving/api.py for the typed contract.
 
-        ``overflow`` is the total number of probes dropped because a hot
-        partition's dispatch bucket filled up (q_cap) — 0 means every
-        requested probe was scanned; persistent overflow means recall is
-        degraded and q_cap_factor should be raised. ``impl`` overrides the
-        config's partition-scan backend (scan.py) for this call."""
-        sigma = self.sigma if sigma is None else sigma
-        quantized = getattr(self.cfg, "quantized", False) if quantized is None else quantized
-        if quantized and "codes" not in self.store:
-            raise ValueError("engine has no quantized store; build with quantized=True")
-        nq = queries.shape[0]
+        ``queries`` is an [nq, dim] array or a SearchRequest (then no other
+        arguments are allowed). Plain keywords mirror the request fields;
+        ``quantized=`` is the retired boolean knob, mapped onto ``tier=`` with
+        a DeprecationWarning for one release."""
+        if isinstance(queries, api.SearchRequest):
+            if any(a is not None for a in (sigma, quantized, impl, tier, k)):
+                raise TypeError(
+                    "pass either a SearchRequest or keyword overrides, not both")
+            req = queries
+        else:
+            if quantized is not None:
+                api.warn_deprecated(
+                    "search-quantized-kwarg",
+                    "LiraEngine.search(quantized=) is deprecated; pass "
+                    "tier='f32' / 'pq' / 'residual_pq' (or a SearchRequest)")
+                if tier is None:
+                    tier = tiers.legacy_tier_name(
+                        quantized, quantized and self.cfg.residual_pq)
+            req = api.SearchRequest(queries=queries, k=k, sigma=sigma,
+                                    tier=tier, impl=impl)
+
+        sigma = self.sigma if req.sigma is None else req.sigma
+        tier_obj = tiers.resolve(req.tier if req.tier is not None else self.cfg.tier)
+        k = self.cfg.k if req.k is None else int(req.k)
+        missing = [f for f in tier_obj.store_specs(self.cfg)
+                   if f not in self.store]
+        if missing:
+            raise ValueError(
+                f"engine store lacks {missing} required by tier "
+                f"{tier_obj.name!r}; build with tier={tier_obj.name!r}")
+        tier_obj.check_servable(self.cfg)  # e.g. pq refuses residual codes
+        nq = req.queries.shape[0]
         nq_pad = self._batch_bucket(nq)
-        fn = self.serve_fn(nq_pad, sigma, quantized, impl)
+        fn, cache_hit, impl = self.serve_fn(nq_pad, sigma, tier_obj.name,
+                                            req.impl, k)
         qp = np.zeros((nq_pad, self.cfg.dim), np.float32)
-        qp[:nq] = queries
+        qp[:nq] = req.queries
         # pad rows are masked out of dispatch: they must not probe partitions
         # or occupy q_cap slots that real queries need
         valid = np.zeros((nq_pad,), bool)
@@ -456,5 +474,79 @@ class LiraEngine:
         with self.mesh:
             d, i, npb, ovf = fn(self.params, self.store, jnp.asarray(qp),
                                 jnp.asarray(valid))
-        return (np.asarray(d)[:nq], np.asarray(i)[:nq], np.asarray(npb)[:nq],
-                int(np.asarray(ovf).sum()))
+        result = api.SearchResult(
+            dists=np.asarray(d)[:nq], ids=np.asarray(i)[:nq],
+            nprobe_eff=np.asarray(npb)[:nq], overflow=int(np.asarray(ovf).sum()),
+            stats=api.SearchStats(
+                tier=tier_obj.name, impl=impl, k=k, sigma=float(sigma),
+                bucket=nq_pad, cache_hit=cache_hit))
+        if getattr(self.cfg, "auto_q_cap", False):
+            self._maybe_bump_q_cap(result.overflow)
+        return result
+
+    def _maybe_bump_q_cap(self, overflow: int) -> None:
+        """Adaptive dispatch slack: after _AUTO_Q_CAP_AFTER consecutive
+        overflowing calls, double q_cap_factor and drop the serve cache so the
+        next call compiles with the wider buckets (the overflow counter the
+        PR 4 dispatch fix surfaced, closed into a control loop)."""
+        if overflow <= 0:
+            self._overflow_streak = 0
+            return
+        self._overflow_streak += 1
+        if self._overflow_streak >= self._AUTO_Q_CAP_AFTER:
+            self.cfg = dataclasses.replace(
+                self.cfg, q_cap_factor=self.cfg.q_cap_factor * 2.0)
+            self._serve_cache.clear()
+            self._overflow_streak = 0
+
+    # ------------------------------------------------------------ persistence
+
+    def save(self, directory, step: int = 0):
+        """Persist params + store + config via repro.ckpt (atomic, crash-safe)
+        so built indexes stop being rebuilt per process. bfloat16 planes are
+        upcast to f32 on disk (npy has no bf16); ``load`` restores the tier
+        dtype from the config."""
+        from repro.ckpt import CheckpointManager
+
+        def _savable(leaf):
+            if jnp.dtype(getattr(leaf, "dtype", np.float32)) == jnp.bfloat16:
+                return np.asarray(jnp.asarray(leaf).astype(jnp.float32))
+            return np.asarray(leaf)
+
+        tree = jax.tree.map(_savable, {"params": self.params,
+                                       "store": dict(self.store)})
+        extra = {"config": dataclasses.asdict(self.cfg), "sigma": self.sigma}
+        return CheckpointManager(directory).save(step, tree, extra=extra)
+
+    @classmethod
+    def load(cls, directory, mesh, step: Optional[int] = None):
+        """Rebuild an engine from a ``save`` checkpoint: config comes from the
+        manifest, the restore template (tree structure + dtypes) is derived
+        from the config's tier declarations."""
+        import json
+        import pathlib
+
+        from repro.ckpt import CheckpointManager
+
+        if not pathlib.Path(directory).is_dir():
+            # check before CheckpointManager, whose constructor mkdirs — a
+            # typo'd path must not leave an empty directory tree behind
+            raise FileNotFoundError(f"no engine checkpoint under {directory}")
+        mgr = CheckpointManager(directory)
+        step = step if step is not None else mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no engine checkpoint under {directory}")
+        meta = json.loads(
+            (mgr.dir / f"step_{step:010d}" / "manifest.json").read_text())
+        raw = {key: tuple(val) if isinstance(val, list) else val
+               for key, val in meta["extra"]["config"].items()}
+        cfg = LiraSystemConfig(**raw)
+        template = {
+            "params": jax.tree.map(lambda s: jnp.zeros((), s.dtype),
+                                   probing_param_specs_cache(cfg)),
+            "store": {name: jnp.zeros((), spec.dtype)
+                      for name, spec in store_specs(cfg).items()},
+        }
+        tree, _, extra = mgr.restore(template, step=step)
+        return cls(cfg=cfg, params=tree["params"], store=tree["store"],
+                   mesh=mesh, sigma=float(extra.get("sigma", 0.5)))

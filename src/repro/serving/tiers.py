@@ -1,0 +1,247 @@
+"""Serving-tier registry — the extension point of the typed serving surface.
+
+A `Tier` bundles everything the engine must know about one storage/quantization
+strategy, so `make_serve_step`, `store_specs`, `store_pspecs` and
+`LiraEngine.build` iterate declarations instead of branching on booleans:
+
+  * ``store_specs(cfg)``  — every store field's shape + dtype (models/api.sds);
+  * ``store_pspecs(cfg)`` — each field's mesh PartitionSpec ("model"-sharded
+    planes ride with their partitions, codebooks/centroids replicate);
+  * ``build_store(rng, cfg, store_h)`` — build-time store construction from the
+    host-side partition store, returning the store dict and the (possibly
+    amended) config, e.g. PQ clamps ``pq_ks`` for tiny stores;
+  * ``scan_kwargs(cfg, ctx, fields)`` — the extra operands this tier threads
+    into ``scan.run`` inside the serve step (shared ADC LUT, shortlist depth,
+    residual offset planes); ``{}`` selects the plain f32 scan.
+
+Registered tiers: ``f32`` (exact scan; honors ``cfg.store_dtype`` so a
+bfloat16 store halves the dominant vector-read traffic), ``pq`` (shared-LUT
+ADC shortlist + exact rerank), ``residual_pq`` (codes encode x − centroid with
+the residual ADC identity's offset operands). Adding a tier is one registered
+class here — zero engine edits; the extensibility test in
+tests/test_tiers.py serves through a toy tier defined outside this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import sds
+
+# fields every tier must provide — the serve step's probing/dispatch/rerank
+# operands. Tiers append their own scan-stage fields after these.
+BASE_FIELDS = ("centroids", "vectors", "ids")
+
+_REGISTRY: dict[str, "Tier"] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and index the tier under its name (and
+    aliases). Later registrations win, so tests can shadow-and-restore."""
+    tier = cls()
+    for name in (cls.name, *cls.aliases):
+        _REGISTRY[name] = tier
+    return cls
+
+
+def resolve(tier) -> "Tier":
+    """Map a tier name (or an already-resolved Tier) to the registered
+    instance. Fails fast on typos, like scan.resolve_impl."""
+    if isinstance(tier, Tier):
+        return tier
+    try:
+        return _REGISTRY[tier]
+    except KeyError:
+        raise ValueError(f"unknown serving tier {tier!r}; registered tiers: "
+                         f"{names()}") from None
+
+
+def names() -> tuple[str, ...]:
+    """Canonical registered tier names (aliases collapsed)."""
+    return tuple(sorted({t.name for t in _REGISTRY.values()}))
+
+
+def legacy_tier_name(quantized: bool, residual: bool) -> str:
+    """The tier the retired boolean knobs selected (deprecation shims only)."""
+    return "residual_pq" if residual else ("pq" if quantized else "f32")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanContext:
+    """Serve-step state handed to ``Tier.scan_kwargs`` — everything a tier may
+    derive scan operands from without re-deriving probing work."""
+
+    q_loc: jax.Array        # [q_row, d] local query rows
+    q_pad: jax.Array        # [q_row + 1, d] queries + sentinel row
+    cd: jax.Array           # [q_row, B] query↔centroid squared-distance matrix
+    b0: jax.Array | int     # first partition id owned by this shard
+    b_loc: int              # partitions per shard
+    k: int                  # top-k depth of this serve step
+
+
+class Tier:
+    """Base tier: the exact f32 scan. ``cfg.store_dtype`` controls the vector
+    plane's storage dtype (bfloat16 halves scan reads; distances accumulate in
+    f32 either way, and the quantized tiers' rerank upcasts to f32)."""
+
+    name: str = "f32"
+    aliases: tuple[str, ...] = ()
+
+    # ---------------------------------------------------------- declarations
+
+    def store_specs(self, cfg) -> dict:
+        b, c, d = cfg.n_partitions, cfg.capacity, cfg.dim
+        return {
+            "centroids": sds((b, d)),
+            "vectors": sds((b, c, d), jnp.dtype(getattr(cfg, "store_dtype", "float32"))),
+            "ids": sds((b, c), jnp.int32),
+        }
+
+    def store_pspecs(self, cfg=None) -> dict:
+        return {
+            "centroids": P(None, None),
+            "vectors": P("model", None, None),
+            "ids": P("model", None),
+        }
+
+    # ---------------------------------------------------------------- build
+
+    def build_store(self, rng, cfg, store_h):
+        """Store dict from the host-side partition store (core.build_store).
+        Returns (store, cfg); cfg comes back amended when build resolves a
+        knob (PQ's ks clamp / pq_m default)."""
+        del rng
+        dt = jnp.dtype(getattr(cfg, "store_dtype", "float32"))
+        vectors = jnp.asarray(store_h.vectors)
+        if vectors.dtype != dt:
+            vectors = vectors.astype(dt)
+        store = {"centroids": jnp.asarray(store_h.centroids), "vectors": vectors,
+                 "ids": jnp.asarray(store_h.ids)}
+        return store, cfg
+
+    # ---------------------------------------------------------------- serve
+
+    def check_servable(self, cfg) -> None:
+        """Raise if this tier cannot correctly serve a store built for
+        ``cfg.tier`` (beyond mere field presence, which the engine already
+        checks). Base: any store carries exact f32 operands."""
+        del cfg
+
+    def scan_kwargs(self, cfg, ctx: ScanContext, fields: dict) -> dict:
+        """Extra keyword operands for ``scan.run``; {} = plain f32 scan.
+        ``fields`` maps this tier's non-BASE_FIELDS store names to their local
+        (already sharded) arrays inside the serve step."""
+        del cfg, ctx, fields
+        return {}
+
+
+@register
+class F32Tier(Tier):
+    name = "f32"
+    aliases = ("exact", "float32")
+
+
+@register
+class PqTier(Tier):
+    """Two-stage quantized tier: shared per-query ADC LUT → shortlist of
+    ``rerank·k`` slots over the uint8 codes → exact f32 rerank
+    (serving/quantized.py owns the PQ store construction and byte accounting)."""
+
+    name = "pq"
+    aliases = ("quantized",)
+    residual = False
+
+    def store_specs(self, cfg) -> dict:
+        from repro.core.pq import code_dtype
+
+        specs = super().store_specs(cfg)
+        b, c = cfg.n_partitions, cfg.capacity
+        specs["codes"] = sds((b, c, cfg.pq_m), jnp.dtype(code_dtype(cfg.pq_ks)))
+        specs["codebooks"] = sds((cfg.pq_m, cfg.pq_ks, cfg.dim // cfg.pq_m))
+        return specs
+
+    def store_pspecs(self, cfg=None) -> dict:
+        sp = super().store_pspecs(cfg)
+        sp["codes"] = P("model", None, None)   # codes shard with their vectors
+        sp["codebooks"] = P(None, None, None)  # replicated like centroids
+        return sp
+
+    def build_store(self, rng, cfg, store_h):
+        import dataclasses as dc
+
+        from repro.serving import quantized as quantized_tier
+
+        store, cfg = super().build_store(rng, cfg, store_h)
+        # default pq_m: largest divisor of dim ≤ 16 (subspaces must tile dim)
+        m = cfg.pq_m or max(m for m in range(1, min(16, cfg.dim) + 1)
+                            if cfg.dim % m == 0)
+        qs = quantized_tier.build_quantized_store(
+            rng, store_h.vectors, store_h.ids, m=m, ks=cfg.pq_ks,
+            residual=self.residual,
+            centroids=store_h.centroids if self.residual else None)
+        store["codes"], store["codebooks"] = qs.codes, qs.codebooks
+        if self.residual:
+            store["cterm"] = qs.cterm
+        # ks may have been clamped for tiny stores
+        return store, dc.replace(cfg, pq_m=m, pq_ks=qs.ks)
+
+    def check_servable(self, cfg) -> None:
+        # codes built for residual_pq encode x − centroid: scanning them
+        # through the plain shared-LUT path (no cterm/offset corrections)
+        # would silently rank by distance-to-residual — wrong answers, not an
+        # error, so refuse up front
+        if not self.residual and cfg.tier == "residual_pq":
+            raise ValueError(
+                "store codes are residual-encoded (built with "
+                "tier='residual_pq'); serve tier='residual_pq' or the exact "
+                "'f32' fallback, not 'pq'")
+
+    def scan_kwargs(self, cfg, ctx: ScanContext, fields: dict) -> dict:
+        from repro.serving import quantized as quantized_tier
+
+        codes, codebooks = fields["codes"], fields["codebooks"]
+        m = codes.shape[-1]
+        rk = min(cfg.capacity, max(ctx.k, int(getattr(cfg, "rerank", 4)) * ctx.k))
+        # per-query ADC LUT, once — valid across all partitions. Non-residual
+        # codebooks make it exact; residual codebooks are exact up to the two
+        # scalar corrections of the residual ADC identity (core/pq.py) added
+        # by ResidualPqTier below. The zero row pairs with q_pad's sentinel.
+        lut_pad = jnp.concatenate(
+            [quantized_tier.adc_lut(codebooks, ctx.q_loc),
+             jnp.zeros((1, m, codebooks.shape[1]), jnp.float32)], 0)
+        return {"lut_pad": lut_pad, "codes_loc": codes, "rk": rk}
+
+
+@register
+class ResidualPqTier(PqTier):
+    """PQ over x − centroid: the code budget goes to the within-partition
+    residual (the clustered-store win), paid for by a per-slot cterm plane and
+    a per-(query, partition) offset derived from the probing cd matrix."""
+
+    name = "residual_pq"
+    aliases = ("residual",)
+    residual = True
+
+    def store_specs(self, cfg) -> dict:
+        specs = super().store_specs(cfg)
+        specs["cterm"] = sds((cfg.n_partitions, cfg.capacity))
+        return specs
+
+    def store_pspecs(self, cfg=None) -> dict:
+        sp = super().store_pspecs(cfg)
+        sp["cterm"] = P("model", None)  # rides with its codes
+        return sp
+
+    def scan_kwargs(self, cfg, ctx: ScanContext, fields: dict) -> dict:
+        kw = super().scan_kwargs(cfg, ctx, fields)
+        # ‖c_b‖² − 2⟨q, c_b⟩ = cd − ‖q‖², per (query, partition); the centroid
+        # distance matrix cd is already computed for probing.
+        off = ctx.cd - jnp.sum(ctx.q_loc * ctx.q_loc, -1, keepdims=True)
+        off_pad = jnp.concatenate([off, jnp.zeros((1, off.shape[1]), off.dtype)], 0)
+        off_loc = jax.lax.dynamic_slice_in_dim(
+            off_pad, ctx.b0, ctx.b_loc, axis=1).T      # [b_loc, q_row + 1]
+        kw.update(cterm_loc=fields["cterm"], off_loc=off_loc)
+        return kw

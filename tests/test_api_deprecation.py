@@ -1,0 +1,145 @@
+"""Deprecation-shim contract tests (ISSUE 5).
+
+The redesign keeps two legacy surfaces alive for one release:
+  * tuple-unpacking a SearchResult as (dists, ids, nprobe_eff, overflow);
+  * the quantized=/residual= boolean kwargs on LiraEngine.build / search.
+Both must warn EXACTLY ONCE (per result object / per process surface) and
+produce results identical to the new typed API. Tier-1 runs with
+``-W error::DeprecationWarning`` (pyproject filterwarnings), so this module —
+the only place allowed to touch the legacy surface — carries an explicit
+allowlist mark; everywhere else a deprecated call is a test failure.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.data import make_vector_dataset
+from repro.launch.mesh import make_test_mesh
+from repro.serving import BuildConfig, LiraEngine, SearchRequest
+from repro.serving import api
+
+# the allowlist: shim tests legitimately emit DeprecationWarning
+pytestmark = pytest.mark.filterwarnings("default::DeprecationWarning")
+
+BUILD = dict(n_partitions=4, k=5, eta=0.0, train_frac=0.4, epochs=1,
+             nprobe_max=4)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_vector_dataset(n=800, n_queries=16, dim=16, n_modes=8, seed=9)
+
+
+@pytest.fixture(scope="module")
+def engine(dataset):
+    return LiraEngine.build(make_test_mesh(), dataset.base, BuildConfig(
+        tier="residual_pq", pq_m=4, pq_ks=16, rerank=4, **BUILD))
+
+
+def _deprecations(record):
+    return [w for w in record if issubclass(w.category, DeprecationWarning)]
+
+
+# ------------------------------------------------------------- tuple shim
+
+def test_tuple_unpacking_warns_once_and_matches_fields(engine, dataset):
+    res = engine.search(SearchRequest(queries=dataset.queries, sigma=-1.0))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        d, i, npb, ovf = res           # legacy 4-tuple unpack
+        d2 = res[0]                    # legacy indexing, same result object
+        assert len(res) == 4
+    assert len(_deprecations(rec)) == 1  # once per result, not per access
+    np.testing.assert_array_equal(d, res.dists)
+    np.testing.assert_array_equal(d2, res.dists)
+    np.testing.assert_array_equal(i, res.ids)
+    np.testing.assert_array_equal(npb, res.nprobe_eff)
+    assert ovf == res.overflow
+    # a fresh result re-arms the shim: each legacy call site gets its warning
+    res2 = engine.search(SearchRequest(queries=dataset.queries, sigma=-1.0))
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        _, _, _, _ = res2
+    assert len(_deprecations(rec2)) == 1
+
+
+def test_named_field_access_never_warns(engine, dataset):
+    res = engine.search(SearchRequest(queries=dataset.queries, sigma=-1.0))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        _ = res.dists, res.ids, res.nprobe_eff, res.overflow, res.stats
+    assert not _deprecations(rec)
+
+
+# ----------------------------------------------------------- legacy kwargs
+
+def test_legacy_build_kwargs_warn_once_and_match_new_api(dataset):
+    api.reset_deprecation_warnings()
+    mesh = make_test_mesh()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy = LiraEngine.build(mesh, dataset.base, quantized=True,
+                                  residual=True, pq_m=4, pq_ks=16, rerank=4,
+                                  **BUILD)
+        again = LiraEngine.build(mesh, dataset.base, residual=True,
+                                 pq_m=4, pq_ks=16, rerank=4, **BUILD)
+    assert len(_deprecations(rec)) == 1  # once per process, not per call
+    new = LiraEngine.build(mesh, dataset.base, BuildConfig(
+        tier="residual_pq", pq_m=4, pq_ks=16, rerank=4, **BUILD))
+    assert legacy.cfg == again.cfg == new.cfg
+    assert legacy.cfg.tier == "residual_pq"
+    r_legacy = legacy.search(SearchRequest(queries=dataset.queries, sigma=-1.0))
+    r_new = new.search(SearchRequest(queries=dataset.queries, sigma=-1.0))
+    np.testing.assert_array_equal(r_legacy.dists, r_new.dists)
+    np.testing.assert_array_equal(r_legacy.ids, r_new.ids)
+    assert r_legacy.overflow == r_new.overflow
+
+
+def test_legacy_search_kwarg_warns_once_and_matches_tier(engine, dataset):
+    api.reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        r_old_q = engine.search(dataset.queries, sigma=-1.0, quantized=True)
+        r_old_f = engine.search(dataset.queries, sigma=-1.0, quantized=False)
+    assert len(_deprecations(rec)) == 1
+    # quantized=True on a residual engine meant the residual tier (old
+    # semantics: the boolean picked the branch, cfg.residual_pq the mode)
+    r_new_q = engine.search(SearchRequest(queries=dataset.queries, sigma=-1.0,
+                                          tier="residual_pq"))
+    r_new_f = engine.search(SearchRequest(queries=dataset.queries, sigma=-1.0,
+                                          tier="f32"))
+    np.testing.assert_array_equal(r_old_q.dists, r_new_q.dists)
+    np.testing.assert_array_equal(r_old_q.ids, r_new_q.ids)
+    np.testing.assert_array_equal(r_old_f.dists, r_new_f.dists)
+    np.testing.assert_array_equal(r_old_f.ids, r_new_f.ids)
+
+
+def test_request_plus_kwargs_rejected(engine, dataset):
+    req = SearchRequest(queries=dataset.queries)
+    with pytest.raises(TypeError, match="SearchRequest"):
+        engine.search(req, sigma=0.3)
+    with pytest.raises(TypeError, match="BuildConfig"):
+        LiraEngine.build(make_test_mesh(), dataset.base,
+                         BuildConfig(**BUILD), k=5)
+
+
+def test_config_boolean_aliases_derive_from_tier():
+    """The config keeps quantized/residual_pq as read-only derived aliases;
+    tier wins when both are present (dataclasses.replace keeps the old tier,
+    so boolean 'edits' on a resolved config are no-ops by design)."""
+    from repro.configs.base import LiraSystemConfig
+
+    legacy = LiraSystemConfig(arch="t", dim=16, n_partitions=4, capacity=32,
+                              k=5, nprobe_max=4, quantized=True,
+                              residual_pq=True)
+    assert legacy.tier == "residual_pq"
+    new = LiraSystemConfig(arch="t", dim=16, n_partitions=4, capacity=32,
+                           k=5, nprobe_max=4, tier="pq")
+    assert new.quantized and not new.residual_pq
+    # pre-redesign, residual_pq without quantized served the plain f32 scan
+    # (residual was a mode OF the quantized tier) — preserved, and the stale
+    # boolean re-derives to keep the aliases self-consistent with the tier
+    stale = LiraSystemConfig(arch="t", dim=16, n_partitions=4, capacity=32,
+                             k=5, nprobe_max=4, residual_pq=True)
+    assert stale.tier == "f32" and not stale.quantized and not stale.residual_pq

@@ -115,7 +115,7 @@ def smoke_engines():
     ds = make_vector_dataset(n=3000, n_queries=64, dim=32, n_modes=24, seed=7)
     eng = LiraEngine.build(make_test_mesh(), ds.base, n_partitions=8, k=10,
                            eta=0.05, train_frac=0.4, epochs=3, nprobe_max=8,
-                           quantized=True, pq_m=8, pq_ks=256, rerank=8)
+                           tier="pq", pq_m=8, pq_ks=256, rerank=8)
     _, gti = gt.exact_knn(ds.queries, ds.base, 10)
     return eng, ds, gti
 
@@ -124,8 +124,8 @@ def test_quantized_recall_within_2pct_of_f32(smoke_engines):
     from repro.core.metrics import recall_at_k
 
     eng, ds, gti = smoke_engines
-    _, i_f, _, _ = eng.search(ds.queries, sigma=-1.0, quantized=False)
-    _, i_q, _, _ = eng.search(ds.queries, sigma=-1.0, quantized=True)
+    i_f = eng.search(ds.queries, sigma=-1.0, tier="f32").ids
+    i_q = eng.search(ds.queries, sigma=-1.0, tier="pq").ids
     r_f, r_q = recall_at_k(i_f, gti, 10), recall_at_k(i_q, gti, 10)
     assert r_f == pytest.approx(1.0, abs=1e-6)  # full probe f32 is exact
     assert r_q >= r_f - 0.02, (r_q, r_f)
@@ -149,7 +149,7 @@ def test_quantized_replica_dedup_no_duplicate_ids():
                                m=4, ks=64)
     cfg = LiraSystemConfig(arch="lira", dim=dim, n_partitions=b,
                            capacity=store_h.capacity, k=k, nprobe_max=b,
-                           quantized=True, pq_m=4, pq_ks=qs.ks, rerank=8)
+                           tier="pq", pq_m=4, pq_ks=qs.ks, rerank=8)
     store = {"centroids": store_h.centroids, "vectors": store_h.vectors,
              "ids": store_h.ids, "codes": qs.codes, "codebooks": qs.codebooks}
     params = probing.init(jax.random.PRNGKey(0),
@@ -157,7 +157,8 @@ def test_quantized_replica_dedup_no_duplicate_ids():
     eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=make_test_mesh(),
                      sigma=-1.0)  # σ=-1: every replica pair is visited
     q = host.normal(size=(16, dim)).astype(np.float32)
-    d, i, npb, _ = eng.search(q)
+    res = eng.search(q)
+    d, i, npb = res.dists, res.ids, res.nprobe_eff
     assert (npb == b).all()
     for r in range(len(q)):
         row = i[r][i[r] >= 0].tolist()
@@ -177,10 +178,13 @@ def test_search_jit_cache_buckets(smoke_engines):
     cache entry; results are sliced back to the true batch size."""
     eng, ds, _ = smoke_engines
     eng._serve_cache.clear()
-    d5, i5, n5, _ = eng.search(ds.queries[:5], sigma=0.4)
-    d7, i7, n7, _ = eng.search(ds.queries[:7], sigma=0.4)
+    r5 = eng.search(ds.queries[:5], sigma=0.4)
+    r7 = eng.search(ds.queries[:7], sigma=0.4)
+    d5, i5, d7, i7, n7 = r5.dists, r5.ids, r7.dists, r7.ids, r7.nprobe_eff
     assert d5.shape == (5, 10) and d7.shape == (7, 10) and n7.shape == (7,)
     assert len(eng._serve_cache) == 1  # 5 and 7 share the 8-bucket
+    assert not r5.stats.cache_hit and r7.stats.cache_hit  # bucket reuse surfaced
+    assert r5.stats.bucket == r7.stats.bucket == 8
     eng.search(ds.queries[:20], sigma=0.4)
     assert len(eng._serve_cache) == 2  # 32-bucket
     # padded rows must not disturb real queries: prefix results identical

@@ -235,14 +235,14 @@ def clustered_engines():
                              boundary_frac=0.0, noise_frac=0.0, seed=5)
     eng_nr = LiraEngine.build(make_test_mesh(), ds.base, n_partitions=8, k=10,
                               eta=0.05, train_frac=0.3, epochs=3, nprobe_max=8,
-                              quantized=True, pq_m=8, pq_ks=32, rerank=2)
+                              tier="pq", pq_m=8, pq_ks=32, rerank=2)
     qs = build_quantized_store(jax.random.PRNGKey(1), eng_nr.store["vectors"],
                                eng_nr.store["ids"], m=8, ks=32, residual=True,
                                centroids=eng_nr.store["centroids"])
     assert qs.residual and qs.ks == eng_nr.cfg.pq_ks  # equal code size
     store_r = {**eng_nr.store, "codes": qs.codes, "codebooks": qs.codebooks,
                "cterm": qs.cterm}
-    eng_r = LiraEngine(cfg=dataclasses.replace(eng_nr.cfg, residual_pq=True),
+    eng_r = LiraEngine(cfg=dataclasses.replace(eng_nr.cfg, tier="residual_pq"),
                        params=eng_nr.params, store=store_r, mesh=eng_nr.mesh)
     _, gti = gt.exact_knn(ds.queries, ds.base, 10)
     return eng_nr, eng_r, ds, gti
@@ -253,8 +253,8 @@ def test_residual_recall_gate_on_clustered_data(clustered_engines):
     recall@10 must be ≥ non-residual on clustered data — the reason this PR
     exists. The margin on this workload is ~15 points, far above seed noise."""
     eng_nr, eng_r, ds, gti = clustered_engines
-    _, i_nr, _, _ = eng_nr.search(ds.queries, sigma=-1.0, quantized=True)
-    _, i_r, _, _ = eng_r.search(ds.queries, sigma=-1.0, quantized=True)
+    i_nr = eng_nr.search(ds.queries, sigma=-1.0, tier="pq").ids
+    i_r = eng_r.search(ds.queries, sigma=-1.0, tier="residual_pq").ids
     r_nr, r_r = recall_at_k(i_nr, gti, 10), recall_at_k(i_r, gti, 10)
     assert r_r >= r_nr, (r_r, r_nr)
 
@@ -285,7 +285,7 @@ def test_residual_recall_within_2pct_of_f32(clustered_engines):
     """Mirror of tests/test_quantized.py's non-residual case: with probe-all
     σ the residual tier must stay within 2% of the exact path."""
     eng_nr, eng_r, ds, gti = clustered_engines
-    _, i_f, _, _ = eng_r.search(ds.queries, sigma=-1.0, quantized=False)
+    i_f = eng_r.search(ds.queries, sigma=-1.0, tier="f32").ids
     r_f = recall_at_k(i_f, gti, 10)
     assert r_f == pytest.approx(1.0, abs=1e-6)  # full probe f32 is exact
     # rerank=2 is deliberately starved to expose the residual-vs-non-residual
@@ -293,7 +293,7 @@ def test_residual_recall_within_2pct_of_f32(clustered_engines):
     # production shortlist depth instead
     eng_deep = LiraEngine(cfg=dataclasses.replace(eng_r.cfg, rerank=16),
                           params=eng_r.params, store=eng_r.store, mesh=eng_r.mesh)
-    _, i_q, _, _ = eng_deep.search(ds.queries, sigma=-1.0, quantized=True)
+    i_q = eng_deep.search(ds.queries, sigma=-1.0, tier="residual_pq").ids
     assert recall_at_k(i_q, gti, 10) >= r_f - 0.02
 
 
@@ -328,8 +328,7 @@ def test_residual_replica_dedup_no_duplicate_ids_eta_pos():
     assert qs.cterm is not None and qs.cterm.shape == store_h.ids.shape
     cfg = LiraSystemConfig(arch="lira", dim=dim, n_partitions=b,
                            capacity=store_h.capacity, k=k, nprobe_max=b,
-                           quantized=True, pq_m=4, pq_ks=qs.ks, rerank=8,
-                           residual_pq=True)
+                           tier="residual_pq", pq_m=4, pq_ks=qs.ks, rerank=8)
     store = {"centroids": store_h.centroids, "vectors": store_h.vectors,
              "ids": store_h.ids, "codes": qs.codes, "codebooks": qs.codebooks,
              "cterm": qs.cterm}
@@ -338,7 +337,8 @@ def test_residual_replica_dedup_no_duplicate_ids_eta_pos():
     eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=make_test_mesh(),
                      sigma=-1.0)  # σ=-1: every replica pair is visited
     q = host.normal(size=(16, dim)).astype(np.float32)
-    d, i, npb, _ = eng.search(q)
+    res = eng.search(q)
+    d, i, npb = res.dists, res.ids, res.nprobe_eff
     assert (npb == b).all()
     _, gti = gt.exact_knn(q, x, k)
     assert recall_at_k(i, gti, k) >= 0.98  # probe-all + deep rerank ≈ exact

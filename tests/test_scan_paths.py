@@ -183,13 +183,13 @@ def tier_engines(request):
     for eta in (0.0, ETA_ON):
         eng = LiraEngine.build(mesh, ds.base, n_partitions=B, k=10, eta=eta,
                                train_frac=0.5, epochs=2, nprobe_max=B,
-                               quantized=True, pq_m=4, pq_ks=32, rerank=4)
+                               tier="pq", pq_m=4, pq_ks=32, rerank=4)
         qs = build_quantized_store(jax.random.PRNGKey(9), eng.store["vectors"],
                                    eng.store["ids"], m=4, ks=eng.cfg.pq_ks,
                                    residual=True, centroids=eng.store["centroids"])
         store_r = {**eng.store, "codes": qs.codes, "codebooks": qs.codebooks,
                    "cterm": qs.cterm}
-        eng_r = LiraEngine(cfg=dataclasses.replace(eng.cfg, residual_pq=True),
+        eng_r = LiraEngine(cfg=dataclasses.replace(eng.cfg, tier="residual_pq"),
                            params=eng.params, store=store_r, mesh=mesh)
         engines[eta] = (eng, eng_r)
     return engines, ds
@@ -202,11 +202,13 @@ def test_engine_kernel_path_matches_ref(tier_engines, tier, eta):
     return bit-identical distances and set-identical ids on every tier."""
     engines, ds = tier_engines
     eng = engines[eta][1 if tier == "residual" else 0]
-    quantized = tier != "f32"
-    d_ref, i_ref, np_ref, ov_ref = eng.search(ds.queries, sigma=0.3,
-                                              quantized=quantized, impl="ref")
-    d_ker, i_ker, np_ker, ov_ker = eng.search(ds.queries, sigma=0.3,
-                                              quantized=quantized, impl="interpret")
+    tier_name = {"f32": "f32", "quantized": "pq", "residual": "residual_pq"}[tier]
+    r_ref = eng.search(ds.queries, sigma=0.3, tier=tier_name, impl="ref")
+    r_ker = eng.search(ds.queries, sigma=0.3, tier=tier_name, impl="interpret")
+    d_ref, i_ref, np_ref, ov_ref = (r_ref.dists, r_ref.ids, r_ref.nprobe_eff,
+                                    r_ref.overflow)
+    d_ker, i_ker, np_ker, ov_ker = (r_ker.dists, r_ker.ids, r_ker.nprobe_eff,
+                                    r_ker.overflow)
     np.testing.assert_array_equal(d_ref, d_ker)
     np.testing.assert_array_equal(np_ref, np_ker)
     assert ov_ref == ov_ker
@@ -244,7 +246,9 @@ def test_padded_batch_identical_to_unpadded(tiny_serving):
     cfg = LiraSystemConfig(arch="t", dim=dim, n_partitions=b, capacity=cap,
                            k=5, nprobe_max=b, q_cap_factor=1.0)
     eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=mesh, sigma=-1.0)
-    d_pad, i_pad, np_pad, ovf_pad = eng.search(q[:5])
+    r_pad = eng.search(q[:5])
+    d_pad, i_pad, np_pad, ovf_pad = (r_pad.dists, r_pad.ids, r_pad.nprobe_eff,
+                                     r_pad.overflow)
     fn = make_serve_step(cfg, mesh, 5, sigma=-1.0)
     with mesh:
         d_un, i_un, np_un, ovf_un = jax.jit(fn)(params, store, jnp.asarray(q[:5]))
@@ -269,7 +273,8 @@ def test_qcap_overflow_is_reported_not_swallowed(tiny_serving):
     cfg = LiraSystemConfig(arch="t", dim=dim, n_partitions=b, capacity=cap,
                            k=5, nprobe_max=b, q_cap_factor=0.25)
     eng = LiraEngine(cfg=cfg, params=params, store=store, mesh=mesh, sigma=-1.0)
-    d, i, npb, overflow = eng.search(q)
+    res = eng.search(q)
+    d, i, npb, overflow = res.dists, res.ids, res.nprobe_eff, res.overflow
     # σ=-1: nq·b probes requested, q_cap = nq·b/b · 0.25 per partition kept
     q_cap = max(8, int(nq * b / b * 0.25))
     assert overflow == (nq - q_cap) * b > 0
@@ -278,5 +283,5 @@ def test_qcap_overflow_is_reported_not_swallowed(tiny_serving):
     cfg_ok = dataclasses.replace(cfg, q_cap_factor=float(nq))
     eng_ok = LiraEngine(cfg=cfg_ok, params=params, store=store, mesh=mesh,
                         sigma=-1.0)
-    _, _, _, overflow_ok = eng_ok.search(q)
+    overflow_ok = eng_ok.search(q).overflow
     assert overflow_ok == 0

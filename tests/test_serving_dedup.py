@@ -47,7 +47,7 @@ def replicated_engine():
 
 def test_engine_search_has_no_duplicate_ids(replicated_engine):
     eng, _, _, q = replicated_engine
-    _, i, _, _ = eng.search(q)
+    i = eng.search(q).ids
     for r in range(len(q)):
         row = i[r][i[r] >= 0].tolist()
         assert len(row) == len(set(row)), f"query {r} returned duplicate ids: {row}"
@@ -58,7 +58,8 @@ def test_engine_search_matches_bruteforce_and_eval_path(replicated_engine):
     the recall matches the numpy evaluation engine within 1e-6."""
     eng, store_h, x, q = replicated_engine
     k = eng.cfg.k
-    d, i, npb, _ = eng.search(q)
+    res = eng.search(q)
+    d, i, npb = res.dists, res.ids, res.nprobe_eff
     assert (npb == eng.cfg.n_partitions).all()
     _, gti = gt.exact_knn(q, x, k)
     per_hits = np.array([len(set(i[r].tolist()) & set(gti[r].tolist()))
@@ -81,7 +82,8 @@ def test_merge_topk_matches_engine(replicated_engine):
     with the distributed engine on the same full-probe workload."""
     eng, store_h, x, q = replicated_engine
     k = eng.cfg.k
-    d_eng, i_eng, _, _ = eng.search(q)
+    res = eng.search(q)
+    d_eng, i_eng = res.dists, res.ids
     ptk = ret.partition_topk(store_h, q, k)
     mask = np.ones((len(q), store_h.n_partitions), bool)
     d_host, i_host = ret.merge_topk(ptk, mask, k, dedup_pool=store_h.capacity)
