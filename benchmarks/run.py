@@ -1,11 +1,16 @@
 """Benchmark driver: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV rows (and tees them to results/bench.csv).
+Suites whose ``run`` returns a dict produce a per-PR perf snapshot:
+``--json-out DIR`` writes each as ``DIR/BENCH_<suite>.json`` (the serving
+suite's ``BENCH_serving.json`` is the first — uploaded as a CI artifact so
+wall-clock regressions stop being invisible).
 
-    PYTHONPATH=src python -m benchmarks.run [--only table1,fig7]
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig7] [--json-out .]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import sys
 import time
@@ -14,6 +19,7 @@ SUITES = [
     ("eval_merge", "benchmarks.eval_merge"),
     ("quantized_scan", "benchmarks.quantized_scan"),
     ("scan_paths", "benchmarks.scan_paths"),
+    ("serving", "benchmarks.serving_frontend"),
     ("fig2", "benchmarks.fig2_motivation"),
     ("fig11", "benchmarks.fig11_convergence"),
     ("table1", "benchmarks.table1_vary_k"),
@@ -27,6 +33,9 @@ SUITES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated suite names")
+    ap.add_argument("--json-out", default="",
+                    help="directory to write BENCH_<suite>.json perf "
+                         "snapshots for suites that produce one")
     args = ap.parse_args()
     only = {s for s in args.only.split(",") if s}
     unknown = only - {tag for tag, _ in SUITES}
@@ -47,6 +56,7 @@ def main() -> None:
     import importlib
 
     failed: list[str] = []
+    payloads: dict[str, dict] = {}
     t_all = time.time()
     for tag, mod_name in SUITES:
         if only and tag not in only:
@@ -54,7 +64,9 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(mod_name)
-            mod.run(emit)
+            payload = mod.run(emit)
+            if isinstance(payload, dict):
+                payloads[tag] = payload
             emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, "ok")
         except Exception as e:  # keep the harness going; record the failure
             failed.append(tag)
@@ -64,6 +76,13 @@ def main() -> None:
             traceback.print_exc()
     emit("_total_seconds", (time.time() - t_all) * 1e6, "")
     out_path.write_text("\n".join(rows) + "\n")
+    if args.json_out:
+        outdir = pathlib.Path(args.json_out)
+        outdir.mkdir(parents=True, exist_ok=True)
+        for tag, payload in payloads.items():
+            f = outdir / f"BENCH_{tag}.json"
+            f.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+            print(f"wrote {f}", file=sys.stderr)
     if failed:  # a half-run must not look green (CI smoke relies on this)
         print(f"FAILED suites: {','.join(failed)}", file=sys.stderr)
         sys.exit(1)

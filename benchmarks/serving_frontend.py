@@ -1,0 +1,155 @@
+"""Serving front-end under open-loop load — the repo's first persisted perf
+trajectory (ISSUE 6 / ROADMAP open item 4).
+
+Drives a synthetic open-loop single-query arrival stream (arrivals at fixed
+intervals that do NOT back off when the system falls behind) through the
+dynamic-batching front-end at three offered-load points relative to the
+engine's measured drain rate: comfortable (0.2×), near-saturation (0.8×) and
+overload (3×). The clock is virtual, but each coalesced engine call's real
+wall time is charged onto it (``charge_service=True``), so p50/p99/QPS
+reflect true serve cost under deterministic arrivals — reproducible queueing,
+honest service times.
+
+Emits the usual CSV rows AND returns a JSON payload that ``benchmarks/run.py
+--json-out`` persists as ``BENCH_serving.json`` (p50/p99 latency, QPS, shed
+rate per load point) — per-PR perf snapshots start here.
+
+CI smoke asserts the two properties that must never regress:
+  * zero sheds at low load (admission control only fires under pressure);
+  * low-load p99 stays within the deadline budget (max_wait plus a small
+    multiple of the measured per-batch serve time — queueing, not compute,
+    must dominate a lightly loaded front-end).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks import _harness as H
+from repro.configs.base import FrontendConfig
+from repro.data import make_vector_dataset
+from repro.launch.mesh import make_test_mesh
+from repro.serving import SearchRequest
+from repro.serving.engine import LiraEngine
+from repro.serving.frontend import FakeClock, ServingFrontend, simulate_open_loop
+
+N, NQ, DIM, B, K = 10_000, 256, 64, 16, 10
+ETA, SIGMA, SEED = 0.03, 0.3, 6
+NPROBE, TRAIN_FRAC, EPOCHS = 8, 0.3, 4
+MAX_BATCH, MAX_WAIT_MS, MAX_QUEUE = 32, 5.0, 64
+N_REQUESTS = 720
+LOADS = (0.2, 0.8, 3.0)        # offered rate as a multiple of the drain rate
+# per-request SLO, in measured batch service times: a request older than this
+# many batches is provably late and shed dead-on-arrival. Scaling the SLO to
+# the measured batch time keeps the gates machine-independent — at low load
+# staleness never exceeds ~1 batch (5x margin), under overload the backlog
+# grows without bound and the SLO must trip.
+DEADLINE_BATCHES = 5.0
+# CI gate: low-load p99 ≤ deadline window + this many measured batch times
+P99_BUDGET_BATCHES = 5.0
+_DS_KEY = (f"servefe_n{N}_d{DIM}_B{B}_s{SEED}_eta{ETA}_k{K}"
+           f"_np{NPROBE}_tf{TRAIN_FRAC}_e{EPOCHS}")
+
+
+def _engine():
+    ds = H._cached(
+        f"ds_{_DS_KEY}",
+        lambda: make_vector_dataset("sift-like", n=N, n_queries=NQ, dim=DIM,
+                                    n_modes=B * 2, seed=SEED))
+
+    def build():
+        from repro.serving import BuildConfig
+
+        eng = LiraEngine.build(
+            make_test_mesh(), ds.base, BuildConfig(
+                n_partitions=B, k=K, eta=ETA, train_frac=TRAIN_FRAC,
+                epochs=EPOCHS, nprobe_max=NPROBE, tier="f32"))
+        return eng.cfg, eng.params, eng.store
+
+    cfg, params, store = H._cached(f"engfe_{_DS_KEY}", build)
+    return LiraEngine(cfg=cfg, params=params, store=store,
+                      mesh=make_test_mesh()), ds
+
+
+def _measure_drain(eng, ds):
+    """Warm every jit bucket a coalesced flush can land on, then time one
+    full-size batch: drain_qps = rows per wall second through the engine.
+    Warming matters — a cold bucket's compile would otherwise be charged as
+    service time and read as a multi-second latency spike."""
+    sizes, s = [], 8
+    while s <= eng._batch_bucket(MAX_BATCH):
+        sizes.append(s)
+        s *= 2
+    for size in sizes:
+        eng.search(SearchRequest(queries=ds.queries[:size], sigma=SIGMA))
+    t0 = time.perf_counter()
+    reps = 3
+    for _ in range(reps):
+        eng.search(SearchRequest(queries=ds.queries[:MAX_BATCH], sigma=SIGMA))
+    batch_s = (time.perf_counter() - t0) / reps
+    return MAX_BATCH / batch_s, batch_s
+
+
+def run(emit):
+    eng, ds = _engine()
+    drain_qps, batch_s = _measure_drain(eng, ds)
+    deadline_ms = DEADLINE_BATCHES * batch_s * 1e3
+    emit("serving/drain_rate", batch_s * 1e6,
+         f"drain_qps={drain_qps:.0f};deadline_ms={deadline_ms:.2f}")
+
+    points = []
+    for load in LOADS:
+        offered = load * drain_qps
+        fe = ServingFrontend(
+            eng, FrontendConfig(max_batch=MAX_BATCH, max_wait_ms=MAX_WAIT_MS,
+                                max_queue=MAX_QUEUE),
+            clock=FakeClock(), charge_service=True)
+        stats, _ = simulate_open_loop(fe, ds.queries, rate_qps=offered,
+                                      n_requests=N_REQUESTS, sigma=SIGMA,
+                                      deadline_ms=deadline_ms)
+        shed_rate = stats.shed / stats.submitted
+        point = {"offered_x_drain": load, "offered_qps": round(offered, 1),
+                 "p50_ms": round(stats.p50_ms, 3),
+                 "p99_ms": round(stats.p99_ms, 3),
+                 "qps": round(stats.qps, 1),
+                 "shed_rate": round(shed_rate, 4),
+                 "served": stats.served, "shed": stats.shed,
+                 "mean_batch": round(stats.mean_batch, 2)}
+        points.append(point)
+        emit(f"serving/load_{load:g}x", stats.p99_ms * 1e3,
+             f"p50_ms={stats.p50_ms:.2f};p99_ms={stats.p99_ms:.2f};"
+             f"qps={stats.qps:.0f};shed_rate={shed_rate:.3f};"
+             f"mean_batch={stats.mean_batch:.1f}")
+
+    # ---- CI smoke gates
+    low = points[0]
+    budget_ms = MAX_WAIT_MS + P99_BUDGET_BATCHES * batch_s * 1e3
+    if low["shed"] != 0:
+        raise AssertionError(
+            f"admission control shed {low['shed']} requests at "
+            f"{LOADS[0]}x load — shedding must only fire under pressure")
+    if low["p99_ms"] >= budget_ms:
+        raise AssertionError(
+            f"low-load p99 {low['p99_ms']:.2f}ms exceeds the deadline budget "
+            f"{budget_ms:.2f}ms (max_wait {MAX_WAIT_MS}ms + "
+            f"{P99_BUDGET_BATCHES:g}x batch {batch_s * 1e3:.2f}ms)")
+    emit("serving/_gates", 0.0,
+         f"low_load_shed=0;p99_budget_ms={budget_ms:.2f}")
+
+    return {
+        "suite": "serving",
+        "config": {"n": N, "dim": DIM, "partitions": B, "k": K,
+                   "sigma": SIGMA, "max_batch": MAX_BATCH,
+                   "max_wait_ms": MAX_WAIT_MS, "max_queue": MAX_QUEUE,
+                   "n_requests": N_REQUESTS,
+                   "deadline_batches": DEADLINE_BATCHES,
+                   "deadline_ms": round(deadline_ms, 3)},
+        "drain_qps": round(drain_qps, 1),
+        "batch_service_ms": round(batch_s * 1e3, 3),
+        "points": points,
+    }
+
+
+if __name__ == "__main__":
+    import json
+
+    print(json.dumps(run(lambda *a: print(*a)), indent=2))

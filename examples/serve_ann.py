@@ -47,6 +47,28 @@ def main():
               f"mean nprobe={res.nprobe_eff.mean():.2f}; dropped probes="
               f"{res.overflow}; recall@10={recall_at_k(res.ids, gti, 10):.3f}")
 
+    # online path: single-query requests through the dynamic-batching
+    # front-end — search_one routes through the attached queue, requests
+    # coalesce into pow2-bucketed batches, telemetry comes back per request
+    from repro.configs.base import FrontendConfig
+    from repro.serving.frontend import FakeClock, simulate_open_loop
+
+    fe = engine.attach_frontend(
+        FrontendConfig(max_batch=32, max_wait_ms=5.0),
+        clock=FakeClock(), charge_service=True)
+    for s in (8, 16, 32):   # warm the flushable jit buckets: steady-state
+        engine.search(SearchRequest(queries=ds.queries[:s], sigma=0.3,
+                                    tier="residual_pq"))
+    stats, pendings = simulate_open_loop(
+        fe, ds.queries, rate_qps=1500.0, n_requests=128, sigma=0.3,
+        tier="residual_pq")
+    one = pendings[0].result()
+    print(f"  [front-end @1500qps offered] p50={stats.p50_ms:.2f}ms "
+          f"p99={stats.p99_ms:.2f}ms qps={stats.qps:.0f} "
+          f"mean_batch={stats.mean_batch:.1f} shed={stats.shed}; first "
+          f"request waited {one.stats.queue_ms:.2f}ms in a "
+          f"{one.stats.batch_size}-row batch")
+
 
 if __name__ == "__main__":
     main()

@@ -126,6 +126,23 @@ RECSYS_SHAPES: Sequence[ShapeSpec] = (
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    """Dynamic-batching front-end knobs (serving/frontend.py). The front-end
+    accumulates single-query ``SearchRequest``s into coalesced batches flushed
+    on whichever trigger fires first — size (``max_batch`` rows, rounded up to
+    the engine's pow2 jit-cache bucket so flushes land on compiled steps) or
+    deadline (``max_wait_ms`` since enqueue, overridable per request via
+    ``SearchRequest.deadline_ms``) — and sheds load once ``max_queue``
+    requests are waiting (admission control; shed requests resolve immediately
+    with ``SearchStats.shed=True`` instead of stalling the queue)."""
+
+    max_batch: int = 64             # size trigger, in coalesced query rows
+    max_wait_ms: float = 2.0        # deadline trigger for queued requests
+    max_queue: int = 256            # admission-control bound, in requests
+    latency_window: int = 1024      # rolling p50/p99 reservoir size
+
+
 # builtin serving-tier aliases → canonical names. Must mirror the `aliases`
 # declared by the builtin Tier classes in serving/tiers.py (which cannot be
 # imported here without a cycle); tests/test_tiers.py asserts the two agree.

@@ -72,6 +72,30 @@ def main():
           f"{res.overflow}; bucket={res.stats.bucket} "
           f"cache_hit={res.stats.cache_hit}")
 
+    # online front-end: single-query stream through the dynamic batcher
+    # (virtual clock, real serve cost charged onto it — serving/frontend.py)
+    from repro.configs.base import FrontendConfig
+    from repro.serving.frontend import FakeClock, simulate_open_loop
+
+    one = engine.search_one(SearchRequest(queries=ds.queries[0],
+                                          sigma=args.sigma))
+    print(f"  search_one: k={one.ids.shape[-1]} "
+          f"nprobe_eff={float(one.nprobe_eff[0]):.2f}")
+    fe = engine.attach_frontend(
+        FrontendConfig(max_batch=32, max_wait_ms=5.0, max_queue=256),
+        clock=FakeClock(), charge_service=True)
+    for s in (8, 16, 32):   # warm the flushable jit buckets: steady-state
+        engine.search(SearchRequest(queries=ds.queries[:s], sigma=args.sigma))
+    try:
+        stats, _ = simulate_open_loop(
+            fe, ds.queries, rate_qps=2000.0, n_requests=256,
+            sigma=args.sigma)
+        print(f"  front-end @2000qps offered: p50={stats.p50_ms:.2f}ms "
+              f"p99={stats.p99_ms:.2f}ms qps={stats.qps:.0f} "
+              f"mean_batch={stats.mean_batch:.1f} shed={stats.shed}")
+    finally:
+        engine.frontend = None
+
     # multi-pod control plane: route batches over replicas, kill one mid-stream
     router = ReplicaRouter(args.pods)
     served = router.dispatch(64, fail_at=(20, 0))

@@ -7,4 +7,11 @@ from repro.serving.api import (  # noqa: F401  (typed serving surface)
     SearchStats,
 )
 from repro.serving.engine import make_bundle, LiraEngine  # noqa: F401
+from repro.serving.frontend import (  # noqa: F401  (dynamic-batching front-end)
+    FakeClock,
+    FrontendConfig,
+    FrontendStats,
+    ServingFrontend,
+    simulate_open_loop,
+)
 from repro.serving.quantized import QuantizedStore, build_quantized_store, scan_store_bytes  # noqa: F401

@@ -82,18 +82,33 @@ class BuildConfig:
 class SearchRequest:
     """One query batch + per-call overrides. ``None`` inherits the engine
     config: tier defaults to the tier the engine was built for, k/σ/impl to
-    ``cfg.k`` / ``engine.sigma`` / ``cfg.impl``."""
+    ``cfg.k`` / ``engine.sigma`` / ``cfg.impl``.
+
+    The batching hints (``deadline_ms``/``priority``/``allow_batching``) only
+    matter when the request goes through the serving front-end
+    (serving/frontend.py); a direct ``engine.search`` call ignores them.
+    Requests coalesce into one batch only when their resolved (k, σ, tier,
+    impl) agree — batching is an optimization, never a semantics change."""
 
     queries: Any                    # [nq, dim] array-like
     k: Optional[int] = None
     sigma: Optional[float] = None
     tier: Optional[str] = None
     impl: Optional[str] = None
+    # ---- front-end batching hints
+    # per-request SLO: tightens the flush window to min(max_wait_ms, this)
+    # and arms dead-on-arrival shedding; None = batching window only, never shed
+    deadline_ms: Optional[float] = None
+    priority: int = 0               # higher wins under admission pressure
+    allow_batching: bool = True     # False → served solo, bypassing the queue
 
 
 @dataclasses.dataclass(frozen=True)
 class SearchStats:
-    """Per-call serving telemetry (not part of the ranked answer)."""
+    """Per-call serving telemetry (not part of the ranked answer). The
+    queue/batch fields are filled in by the serving front-end
+    (serving/frontend.py); a direct ``engine.search`` call leaves them at
+    their defaults (``batch_size=0`` reads as "not front-end batched")."""
 
     tier: str                       # resolved tier that served the call
     impl: str                       # resolved scan backend
@@ -101,6 +116,10 @@ class SearchStats:
     sigma: float
     bucket: int                     # padded power-of-two jit-cache batch bucket
     cache_hit: bool                 # False = this call compiled a serve step
+    # ---- front-end fields (PR 5 follow-up: queue/batch telemetry)
+    queue_ms: float = 0.0           # time spent queued before the batch launched
+    batch_size: int = 0             # coalesced rows in the batch that served this
+    shed: bool = False              # True = dropped by admission control, no answer
 
 
 @dataclasses.dataclass

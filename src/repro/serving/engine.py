@@ -315,6 +315,10 @@ class LiraEngine:
     store: dict
     mesh: jax.sharding.Mesh
     sigma: float = 0.5
+    # attached serving front-end (serving/frontend.py); search_one routes
+    # through it when present. Not part of engine identity or checkpoints.
+    frontend: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                   compare=False)
     _serve_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                            compare=False)
     _overflow_streak: int = dataclasses.field(default=0, repr=False,
@@ -440,6 +444,19 @@ class LiraEngine:
                     "pass either a SearchRequest or keyword overrides, not both")
             req = queries
         else:
+            queries = np.asarray(queries)
+            if queries.ndim == 1 or queries.shape[0] == 1:
+                # single-query traffic belongs on the canonical entry point
+                # (it routes through the batching front-end when one is
+                # attached); raw 1-row arrays + loose kwargs survive one
+                # release behind the shim
+                api.warn_deprecated(
+                    "search-single-query",
+                    "passing a single query as a raw array to "
+                    "LiraEngine.search is deprecated; use "
+                    "search_one(SearchRequest(queries=q, ...))")
+                if queries.ndim == 1:
+                    queries = queries[None, :]
             if quantized is not None:
                 api.warn_deprecated(
                     "search-quantized-kwarg",
@@ -483,6 +500,37 @@ class LiraEngine:
         if getattr(self.cfg, "auto_q_cap", False):
             self._maybe_bump_q_cap(result.overflow)
         return result
+
+    # ------------------------------------------------------------ front-end
+
+    def search_one(self, request: api.SearchRequest) -> api.SearchResult:
+        """The canonical single-query entry point. With a front-end attached
+        (``attach_frontend``) the request joins the dynamic-batching queue and
+        ``result()`` is demanded immediately — coalescing with whatever
+        compatible traffic is already waiting; without one it falls back to a
+        1-row batch through ``search``. ``request.queries`` is one query:
+        ``[dim]`` or ``[1, dim]``."""
+        if not isinstance(request, api.SearchRequest):
+            raise TypeError("search_one takes a SearchRequest; for raw query "
+                            "batches use search()")
+        q = np.asarray(request.queries)
+        if q.ndim == 1:
+            request = dataclasses.replace(request, queries=q[None, :])
+        elif q.ndim != 2 or q.shape[0] != 1:
+            raise ValueError("search_one serves exactly one query "
+                             f"(got shape {q.shape}); use search() for batches")
+        if self.frontend is not None:
+            return self.frontend.submit(request).result()
+        return self.search(request)
+
+    def attach_frontend(self, config=None, **kwargs):
+        """Create and attach a ``ServingFrontend`` over this engine (see
+        serving/frontend.py for the batching/admission/telemetry contract);
+        returns it. Detach with ``engine.frontend = None``."""
+        from repro.serving.frontend import ServingFrontend
+
+        self.frontend = ServingFrontend(self, config, **kwargs)
+        return self.frontend
 
     def _maybe_bump_q_cap(self, overflow: int) -> None:
         """Adaptive dispatch slack: after _AUTO_Q_CAP_AFTER consecutive

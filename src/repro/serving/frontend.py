@@ -1,0 +1,407 @@
+"""Online serving front-end: dynamic batching, admission control, telemetry.
+
+The engine underneath is a batch-synchronous ``search()`` — fast once a batch
+exists, but production traffic is a stream of single-query ``SearchRequest``s
+arriving at wildly varying rates (the HARMONY/LANNS observation: at web scale
+the batching/routing layer above the index, not the scan kernel, dominates
+tail latency). ``ServingFrontend`` is that layer:
+
+  * **dynamic batching** — requests accumulate per compatibility group
+    (resolved ``(k, σ, tier, impl)`` — batching is an optimization, never a
+    semantics change, so incompatible requests never share a serve step) and
+    flush on whichever trigger fires first: size (``max_batch`` coalesced
+    rows, rounded up to the engine's pow2 jit-cache bucket so flushes land on
+    already-compiled steps) or deadline (``max_wait_ms`` since enqueue,
+    tightened per request by ``SearchRequest.deadline_ms``, which also arms
+    dead-on-arrival expiry — see ``submit``);
+  * **admission control** — a bounded queue (``max_queue`` requests). Beyond
+    it, load is SHED instead of queued: the lowest-priority waiting request
+    (or the newcomer, if nothing queued outranks it) resolves immediately
+    with an empty answer marked ``SearchStats.shed=True``, keeping tail
+    latency bounded for the traffic that is admitted;
+  * **latency telemetry** — every served request records its queue wait and
+    end-to-end latency against the injected clock; ``stats()`` snapshots
+    rolling p50/p99, QPS, shed/served counters and mean coalesced batch size
+    as a ``FrontendStats``.
+
+Scatter is exact: each coalesced batch's rows are sliced back into
+per-request ``SearchResult``s that are bit-identical to a solo
+``engine.search()`` of the same query (the serve step is row-independent;
+tests/test_frontend.py gates this across {f32, pq, residual_pq} ×
+{ref, interpret}). The one shared field is ``overflow``: q_cap drops are
+counted per serve step, so a batched result reports its whole batch's total.
+
+The scheduler never sleeps or reads wall clock on its own: time comes from an
+injectable ``clock`` callable (``FakeClock`` for deterministic tests and
+simulation, ``time.monotonic`` in production). Because the engine call is
+synchronous, flushes happen inside ``submit`` (size trigger), ``poll``
+(deadline trigger — drivers call it as their event loop tick) or
+``PendingSearch.result()`` (a caller demanding its answer flushes its own
+group early rather than deadlocking).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.configs.base import FrontendConfig
+from repro.serving import api, scan, tiers
+
+__all__ = ["FakeClock", "FrontendConfig", "FrontendStats", "PendingSearch",
+           "ServingFrontend", "simulate_open_loop"]
+
+
+class FakeClock:
+    """Deterministic injectable clock: time moves only via ``advance``. Used
+    by the scheduler tests (no wall-clock sleeps in tier-1) and the open-loop
+    load simulation, where measured service time is charged explicitly."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot go backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendStats:
+    """Telemetry snapshot (``ServingFrontend.stats()``). Latency quantiles are
+    over the rolling reservoir of the last ``latency_window`` served requests;
+    QPS is served rows over the first-submit → last-completion span."""
+
+    submitted: int                  # requests accepted into the front-end
+    served: int                     # requests answered (excludes shed)
+    shed: int                       # requests dropped by admission control
+    batches: int                    # engine serve calls issued
+    depth: int                      # requests currently queued
+    mean_batch: float               # mean coalesced rows per serve call
+    p50_ms: float                   # rolling median end-to-end latency
+    p99_ms: float                   # rolling tail latency
+    qps: float                      # served query rows / observed span
+
+
+@dataclasses.dataclass
+class PendingSearch:
+    """Handle returned by ``submit``: resolves to a per-request SearchResult
+    once its batch is served (or immediately, when shed). ``result()`` on a
+    still-queued request force-flushes its group — demanding an answer is
+    itself a deadline."""
+
+    request: api.SearchRequest
+    _frontend: "ServingFrontend" = dataclasses.field(repr=False)
+    key: tuple = ()
+    rows: int = 1
+    seq: int = 0
+    t_enq: float = 0.0
+    flush_by: float = 0.0
+    expire_at: Optional[float] = None       # explicit deadline_ms SLO, else None
+    _result: Optional[api.SearchResult] = dataclasses.field(
+        default=None, repr=False)
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> api.SearchResult:
+        if self._result is None:
+            self._frontend._flush_group(self.key)
+        assert self._result is not None
+        return self._result
+
+
+class ServingFrontend:
+    """Dynamic-batching request queue in front of one ``LiraEngine``.
+
+    ``clock`` is any zero-arg callable returning seconds. With
+    ``charge_service=True`` the wall time of each engine call (measured by
+    ``service_timer``) is charged onto the clock via ``clock.advance`` — how
+    the open-loop simulation keeps deterministic arrivals while latencies
+    still reflect real serve cost.
+    """
+
+    def __init__(self, engine, config: FrontendConfig | None = None, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 charge_service: bool = False,
+                 service_timer: Callable[[], float] = time.perf_counter):
+        self.engine = engine
+        self.cfg = config if config is not None else FrontendConfig()
+        if charge_service and not hasattr(clock, "advance"):
+            raise TypeError("charge_service=True needs a clock with .advance "
+                            "(e.g. FakeClock)")
+        self.clock = clock
+        self.charge_service = charge_service
+        self.service_timer = service_timer
+        # flush sizes land on compiled steps: round the size trigger up into
+        # the engine's pow2 jit-cache buckets (engine.py:_batch_bucket)
+        self.max_batch = int(engine._batch_bucket(self.cfg.max_batch))
+        self._groups: dict[tuple, list[PendingSearch]] = {}
+        self._seq = 0
+        self._n_submitted = 0
+        self._n_served = 0
+        self._n_shed = 0
+        self._n_batches = 0
+        self._rows_served = 0
+        self._rows_batched = 0
+        self._lat_ms: collections.deque = collections.deque(
+            maxlen=self.cfg.latency_window)
+        self._t_first: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+    # ------------------------------------------------------------- intake
+
+    def _resolve_key(self, req: api.SearchRequest) -> tuple:
+        """Canonical compatibility key. Mirrors ``engine.serve_fn``'s
+        normalization (tier aliases, impl="auto", k/σ=None) so requests that
+        would hit the same compiled step coalesce into the same group."""
+        eng = self.engine
+        k = eng.cfg.k if req.k is None else int(req.k)
+        sigma = float(eng.sigma if req.sigma is None else req.sigma)
+        tier = tiers.resolve(req.tier if req.tier is not None
+                             else eng.cfg.tier).name
+        impl = scan.resolve_impl(req.impl if req.impl is not None
+                                 else getattr(eng.cfg, "impl", "auto"))
+        return (k, sigma, tier, impl)
+
+    @staticmethod
+    def _rows(req: api.SearchRequest) -> np.ndarray:
+        q = np.asarray(req.queries)
+        return q[None, :] if q.ndim == 1 else q
+
+    def depth(self) -> int:
+        """Requests currently queued (the admission-control measure)."""
+        return sum(len(g) for g in self._groups.values())
+
+    def submit(self, request: api.SearchRequest, *,
+               t_arrival: Optional[float] = None) -> PendingSearch:
+        """Enqueue one request; returns its handle. Size-triggered flushes run
+        inline; sheds resolve the handle immediately with ``stats.shed=True``.
+
+        ``t_arrival`` backdates the request to its true arrival time (the
+        open-loop simulation uses this when intake lags behind the clock):
+        queue wait and the flush deadline then measure from arrival.
+
+        ``deadline_ms`` is an SLO, not just a flush hint: it tightens the
+        flush trigger to ``min(max_wait_ms, deadline_ms)`` AND arms expiry —
+        a request whose explicit deadline already passed before it could be
+        enqueued is shed outright (dead on arrival), because serving
+        provably-late traffic would only burn drain capacity the on-time
+        queue needs. Requests without an explicit deadline never expire: the
+        default ``max_wait_ms`` window is a batching knob, and an admitted
+        request is always answered, merely late, when the engine falls
+        behind."""
+        key = self._resolve_key(request)
+        now = self.clock()
+        t_enq = now if t_arrival is None else float(t_arrival)
+        wait_s = self.cfg.max_wait_ms / 1e3
+        expire_at = None
+        if request.deadline_ms is not None:
+            slo_s = float(request.deadline_ms) / 1e3
+            wait_s = min(wait_s, slo_s)
+            expire_at = t_enq + slo_s
+        self._seq += 1
+        pending = PendingSearch(request=request, _frontend=self, key=key,
+                                rows=len(self._rows(request)), seq=self._seq,
+                                t_enq=t_enq, flush_by=t_enq + wait_s,
+                                expire_at=expire_at)
+        self._n_submitted += 1
+        if self._t_first is None:
+            self._t_first = t_enq
+        if not request.allow_batching:
+            # bypass the queue entirely: a solo batch, served now
+            self._serve_batch(key, [pending])
+            return pending
+        if pending.expire_at is not None and pending.expire_at < now:
+            self._shed(pending)             # dead on arrival: SLO already blown
+            return pending
+        if self.depth() >= self.cfg.max_queue and not self._admit(pending):
+            return pending
+        self._groups.setdefault(key, []).append(pending)
+        if sum(p.rows for p in self._groups[key]) >= self.max_batch:
+            self._flush_group(key)
+        return pending
+
+    def _admit(self, pending: PendingSearch) -> bool:
+        """Admission control at a full queue: shed the lowest-priority waiting
+        request if the newcomer outranks it (newest victim on ties), else shed
+        the newcomer. Returns True when ``pending`` was admitted."""
+        victim = min((p for g in self._groups.values() for p in g),
+                     key=lambda p: (p.request.priority, -p.seq), default=None)
+        if victim is not None and victim.request.priority < pending.request.priority:
+            self._groups[victim.key].remove(victim)
+            if not self._groups[victim.key]:
+                del self._groups[victim.key]
+            self._shed(victim)
+            return True
+        self._shed(pending)
+        return False
+
+    def _shed(self, pending: PendingSearch) -> None:
+        k, sigma, tier, impl = pending.key
+        pending._result = api.SearchResult(
+            dists=np.full((pending.rows, k), np.inf, np.float32),
+            ids=np.full((pending.rows, k), -1, np.int32),
+            nprobe_eff=np.zeros((pending.rows,), np.float32), overflow=0,
+            stats=api.SearchStats(tier=tier, impl=impl, k=k, sigma=sigma,
+                                  bucket=0, cache_hit=False, queue_ms=0.0,
+                                  batch_size=0, shed=True))
+        self._n_shed += 1
+
+    # ---------------------------------------------------------- scheduling
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest flush_by over queued requests (drivers poll() by then)."""
+        deadlines = [p.flush_by for g in self._groups.values() for p in g]
+        return min(deadlines) if deadlines else None
+
+    def poll(self) -> int:
+        """Deadline tick: flush every group whose earliest deadline has
+        passed. Returns the number of serve calls issued."""
+        now = self.clock()
+        n = 0
+        for key in list(self._groups):
+            group = self._groups.get(key)
+            if group and min(p.flush_by for p in group) <= now:
+                n += self._flush_group(key)
+        return n
+
+    def drain(self) -> int:
+        """Flush everything regardless of deadlines (shutdown / end of
+        stream). Returns the number of serve calls issued."""
+        return sum(self._flush_group(key) for key in list(self._groups))
+
+    def _flush_group(self, key: tuple) -> int:
+        """Serve one group's queue: highest-priority first, at most
+        ``max_batch`` coalesced rows per engine call."""
+        group = self._groups.pop(key, None)
+        if not group:
+            return 0
+        group.sort(key=lambda p: (-p.request.priority, p.seq))
+        n_calls = 0
+        while group:
+            batch = [group.pop(0)]
+            rows = batch[0].rows
+            while group and rows + group[0].rows <= self.max_batch:
+                pending = group.pop(0)
+                batch.append(pending)
+                rows += pending.rows
+            self._serve_batch(key, batch)
+            n_calls += 1
+        return n_calls
+
+    def _serve_batch(self, key: tuple, batch: list[PendingSearch]) -> None:
+        k, sigma, tier, impl = key
+        t_launch = self.clock()
+        queries = np.concatenate([self._rows(p.request) for p in batch], 0)
+        t0 = self.service_timer()
+        res = self.engine.search(api.SearchRequest(
+            queries=queries, k=k, sigma=sigma, tier=tier, impl=impl))
+        if self.charge_service:
+            self.clock.advance(self.service_timer() - t0)
+        t_done = self.clock()
+        row = 0
+        for pending in batch:
+            sl = slice(row, row + pending.rows)
+            row += pending.rows
+            pending._result = api.SearchResult(
+                dists=res.dists[sl], ids=res.ids[sl],
+                nprobe_eff=res.nprobe_eff[sl], overflow=res.overflow,
+                stats=api.SearchStats(
+                    tier=tier, impl=impl, k=k, sigma=sigma,
+                    bucket=res.stats.bucket, cache_hit=res.stats.cache_hit,
+                    queue_ms=(t_launch - pending.t_enq) * 1e3,
+                    batch_size=len(queries), shed=False))
+            self._lat_ms.append((t_done - pending.t_enq) * 1e3)
+        self._n_served += len(batch)
+        self._rows_served += len(queries)
+        self._n_batches += 1
+        self._rows_batched += len(queries)
+        self._t_last_done = t_done
+
+    # ------------------------------------------------------------ telemetry
+
+    def stats(self) -> FrontendStats:
+        lat = np.asarray(self._lat_ms, np.float64)
+        span = ((self._t_last_done - self._t_first)
+                if self._t_first is not None and self._t_last_done is not None
+                else 0.0)
+        return FrontendStats(
+            submitted=self._n_submitted, served=self._n_served,
+            shed=self._n_shed, batches=self._n_batches, depth=self.depth(),
+            mean_batch=(self._rows_batched / self._n_batches
+                        if self._n_batches else 0.0),
+            p50_ms=float(np.quantile(lat, 0.50)) if lat.size else 0.0,
+            p99_ms=float(np.quantile(lat, 0.99)) if lat.size else 0.0,
+            qps=(self._rows_served / span) if span > 0 else 0.0)
+
+
+# ------------------------------------------------------------- simulation
+
+def simulate_open_loop(frontend: ServingFrontend, queries: np.ndarray, *,
+                       rate_qps: float, n_requests: int,
+                       deadline_ms: Optional[float] = None,
+                       priority: int = 0, sigma: Optional[float] = None,
+                       tier: Optional[str] = None, impl: Optional[str] = None,
+                       k: Optional[int] = None):
+    """Drive an open-loop single-query arrival stream against the front-end's
+    (fake) clock: request ``i`` arrives at ``i / rate_qps`` regardless of
+    completions — the offered load does not back off when the system falls
+    behind, which is exactly what makes admission control necessary. While the
+    next arrival is in the future the clock advances through each pending
+    group's deadline and polls, like an event-loop driver would; arrivals the
+    clock has already overrun (service time pushed it past them) are submitted
+    backdated without intermediate polls — a backlog coalesces through the
+    size trigger, and each request's latency, or its dead-on-arrival shed when
+    ``deadline_ms`` is set, reflects the backlog it actually experienced.
+    Returns ``(stats, pendings)``; the stream is drained before the snapshot,
+    so every handle is resolved.
+
+    ``sigma``/``tier``/``impl``/``k`` are stamped onto every request — one
+    compatibility group, one jit-cache key (leave them None to inherit the
+    engine defaults). Requires ``frontend.clock`` to be advanceable
+    (``FakeClock``); with ``charge_service=True`` the simulated timeline also
+    carries each engine call's measured wall cost, so p50/p99/QPS reflect
+    real serve speed under deterministic arrivals.
+    """
+    clock = frontend.clock
+    if not hasattr(clock, "advance"):
+        raise TypeError("simulate_open_loop needs an advanceable clock "
+                        "(FakeClock), not wall time")
+    pendings = []
+    for i in range(n_requests):
+        t_arr = i / float(rate_qps)
+        # tick deadline flushes only while advancing toward a FUTURE arrival.
+        # When service time has pushed the clock past t_arr the backlog is
+        # submitted without polling: backdated requests' flush windows are
+        # already expired, and polling between them would flush singleton
+        # batches — the size trigger is what coalesces a backlog.
+        while clock() < t_arr:
+            nd = frontend.next_deadline()
+            if nd is None or nd > t_arr:
+                clock.advance(t_arr - clock())
+                break
+            if nd > clock():
+                clock.advance(nd - clock())
+            frontend.poll()
+        pendings.append(frontend.submit(api.SearchRequest(
+            queries=queries[i % len(queries)], deadline_ms=deadline_ms,
+            priority=priority, sigma=sigma, tier=tier, impl=impl, k=k),
+            t_arrival=t_arr))
+    # end of stream: honor remaining deadlines, then drain
+    while True:
+        nd = frontend.next_deadline()
+        if nd is None:
+            break
+        if nd > clock():
+            clock.advance(nd - clock())
+        frontend.poll()
+    frontend.drain()
+    return frontend.stats(), pendings

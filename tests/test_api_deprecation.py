@@ -115,6 +115,33 @@ def test_legacy_search_kwarg_warns_once_and_matches_tier(engine, dataset):
     np.testing.assert_array_equal(r_old_f.ids, r_new_f.ids)
 
 
+def test_single_query_raw_array_warns_and_matches_search_one(engine, dataset):
+    """ISSUE 6 shim: raw single-query arrays + loose kwargs on ``search`` are
+    deprecated in favor of ``search_one(SearchRequest(...))`` — the canonical
+    entry point that routes through the batching front-end when attached.
+    Both 1-row [1, dim] and bare [dim] shapes warn once per process and
+    return exactly what search_one returns."""
+    api.reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        legacy_row = engine.search(dataset.queries[:1], sigma=-1.0)
+        legacy_1d = engine.search(dataset.queries[0], sigma=-1.0)
+    assert len(_deprecations(rec)) == 1  # once per process, not per call
+    assert "search_one" in str(rec[0].message)
+    new = engine.search_one(SearchRequest(queries=dataset.queries[0],
+                                          sigma=-1.0))
+    assert new.dists.shape == legacy_row.dists.shape == legacy_1d.dists.shape
+    np.testing.assert_array_equal(legacy_row.dists, new.dists)
+    np.testing.assert_array_equal(legacy_1d.dists, new.dists)
+    np.testing.assert_array_equal(legacy_row.ids, new.ids)
+    np.testing.assert_array_equal(legacy_1d.ids, new.ids)
+    # multi-row raw batches stay first-class: no warning
+    with warnings.catch_warnings(record=True) as rec2:
+        warnings.simplefilter("always")
+        engine.search(dataset.queries[:2], sigma=-1.0)
+    assert not _deprecations(rec2)
+
+
 def test_request_plus_kwargs_rejected(engine, dataset):
     req = SearchRequest(queries=dataset.queries)
     with pytest.raises(TypeError, match="SearchRequest"):

@@ -1,0 +1,448 @@
+"""Serving front-end scheduler tests (ISSUE 6) — all wall-clock-free.
+
+Every test drives the scheduler with an injectable FakeClock: deadlines fire
+because the test advances time, never because anything slept. Covered:
+size-triggered flush, deadline-triggered flush (incl. per-request
+deadline_ms), pow2 bucket rounding of the size trigger, incompatible-request
+splitting (different k/σ/tier and alias coalescing), admission-control
+shedding with priority displacement, telemetry quantiles/QPS, and the
+acceptance gate: coalesced-batch results bit-identical to solo
+``engine.search`` calls across {f32, pq, residual_pq} × {ref, interpret}.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FrontendConfig, LiraSystemConfig
+from repro.core import probing
+from repro.data import make_vector_dataset
+from repro.launch.mesh import make_test_mesh
+from repro.serving import (FakeClock, LiraEngine, SearchRequest,
+                           ServingFrontend, simulate_open_loop)
+from repro.serving.engine import make_serve_step
+from repro.serving.quantized import build_quantized_store
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    """Direct-store engine (no build pass): cheap enough that every scheduler
+    test gets a fresh frontend over a shared engine + query pool."""
+    host = np.random.default_rng(5)
+    b, cap, dim = 4, 48, 16
+    vecs = host.normal(0, 1, (b, cap, dim)).astype(np.float32)
+    ids = np.arange(b * cap, dtype=np.int32).reshape(b, cap)
+    store = {"centroids": jnp.asarray(vecs.mean(1)),
+             "vectors": jnp.asarray(vecs), "ids": jnp.asarray(ids)}
+    params = probing.init(jax.random.PRNGKey(0),
+                          probing.ProbingConfig(dim=dim, n_partitions=b))
+    cfg = LiraSystemConfig(arch="t", dim=dim, n_partitions=b, capacity=cap,
+                           k=5, nprobe_max=b)
+    eng = LiraEngine(cfg=cfg, params=params, store=store,
+                     mesh=make_test_mesh(), sigma=-1.0)
+    q = host.normal(0, 1, (64, dim)).astype(np.float32)
+    return eng, q
+
+
+def _frontend(eng, **cfg_kw):
+    clock = FakeClock()
+    defaults = dict(max_batch=8, max_wait_ms=2.0, max_queue=16)
+    defaults.update(cfg_kw)
+    fe = ServingFrontend(eng, FrontendConfig(**defaults), clock=clock)
+    return fe, clock
+
+
+# ------------------------------------------------------------------ flushes
+
+def test_size_triggered_flush(tiny_engine):
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng, max_batch=8)
+    pends = [fe.submit(SearchRequest(queries=q[i])) for i in range(8)]
+    # the 8th submit crossed max_batch: everything served, clock never moved
+    assert all(p.done() for p in pends)
+    assert clock() == 0.0
+    assert fe.stats().batches == 1
+    for p in pends:
+        assert p.result().stats.batch_size == 8
+        assert p.result().stats.queue_ms == 0.0
+
+
+def test_deadline_triggered_flush(tiny_engine):
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng, max_wait_ms=2.0)
+    pends = [fe.submit(SearchRequest(queries=q[i])) for i in range(3)]
+    assert not any(p.done() for p in pends)
+    clock.advance(1.9e-3)
+    assert fe.poll() == 0                   # deadline not reached yet
+    assert fe.next_deadline() == pytest.approx(2.0e-3)
+    clock.advance(0.2e-3)
+    assert fe.poll() == 1                   # one coalesced serve call
+    assert all(p.done() for p in pends)
+    res = pends[0].result()
+    assert res.stats.batch_size == 3
+    assert res.stats.queue_ms == pytest.approx(2.1)
+
+
+def test_per_request_deadline_tightens_window(tiny_engine):
+    """deadline_ms is an SLO: the flush window becomes min(max_wait, SLO) —
+    an urgent request pulls its group's flush forward, but a lax SLO never
+    stretches the batching window beyond max_wait_ms."""
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng, max_wait_ms=5.0)
+    slow = fe.submit(SearchRequest(queries=q[0]))
+    lax = fe.submit(SearchRequest(queries=q[2], deadline_ms=50.0))
+    assert lax.flush_by == pytest.approx(5e-3)     # min() caps at max_wait
+    fast = fe.submit(SearchRequest(queries=q[1], deadline_ms=0.5))
+    assert fe.next_deadline() == pytest.approx(0.5e-3)
+    clock.advance(0.6e-3)
+    fe.poll()
+    # the urgent deadline flushed its GROUP: all compatible requests rode
+    # the same batch rather than splitting traffic
+    assert fast.done() and slow.done() and lax.done()
+    assert fast.result().stats.batch_size == 3
+
+
+def test_result_demands_flush(tiny_engine):
+    """A caller blocking on result() is itself a deadline — the group is
+    flushed early instead of deadlocking a never-polled queue."""
+    eng, q = tiny_engine
+    fe, _ = _frontend(eng)
+    p0 = fe.submit(SearchRequest(queries=q[0]))
+    p1 = fe.submit(SearchRequest(queries=q[1]))
+    assert not p0.done()
+    res = p0.result()
+    assert res.stats.batch_size == 2        # coalesced with the waiting peer
+    assert p1.done()
+    assert fe.depth() == 0
+
+
+def test_allow_batching_false_bypasses_queue(tiny_engine):
+    eng, q = tiny_engine
+    fe, _ = _frontend(eng)
+    queued = fe.submit(SearchRequest(queries=q[0]))
+    solo = fe.submit(SearchRequest(queries=q[1], allow_batching=False))
+    assert solo.done() and not queued.done()     # queue untouched
+    assert solo.result().stats.batch_size == 1
+    assert fe.depth() == 1
+
+
+# ---------------------------------------------------------- bucket rounding
+
+def test_size_trigger_rounds_into_jit_buckets(tiny_engine):
+    """max_batch rounds up to the engine's pow2 jit-cache bucket, so size
+    flushes always land on a compiled step with zero padding waste."""
+    eng, q = tiny_engine
+    fe, _ = _frontend(eng, max_batch=5)
+    assert fe.max_batch == eng._batch_bucket(5) == 8
+    pends = [fe.submit(SearchRequest(queries=q[i])) for i in range(8)]
+    assert all(p.done() for p in pends)
+    assert pends[0].result().stats.bucket == 8
+
+
+def test_deadline_flush_bucket_matches_engine(tiny_engine):
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng)
+    pends = [fe.submit(SearchRequest(queries=q[i])) for i in range(3)]
+    clock.advance(5e-3)
+    fe.poll()
+    # a 3-row deadline flush serves through the engine's 8-bucket
+    assert pends[0].result().stats.bucket == eng._batch_bucket(3) == 8
+
+
+# ----------------------------------------------------------- group splitting
+
+def test_incompatible_requests_split_into_groups(tiny_engine):
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng)
+    a = fe.submit(SearchRequest(queries=q[0]))                  # defaults
+    b = fe.submit(SearchRequest(queries=q[1], k=3))             # different k
+    c = fe.submit(SearchRequest(queries=q[2], sigma=0.9))       # different σ
+    d = fe.submit(SearchRequest(queries=q[3], tier="f32"))      # same (default)
+    assert len(fe._groups) == 3
+    clock.advance(5e-3)
+    assert fe.poll() == 3                   # one serve call per group
+    assert a.result().stats.batch_size == 2 and d.result().stats.batch_size == 2
+    assert b.result().stats.batch_size == 1 and b.result().dists.shape[1] == 3
+    assert c.result().stats.batch_size == 1
+    assert c.result().stats.sigma == pytest.approx(0.9)
+
+
+def test_alias_and_default_requests_coalesce(tiny_engine):
+    """Tier aliases, impl="auto" and None must land in one group — they hit
+    the same compiled step (mirrors serve_fn's cache-key normalization)."""
+    eng, q = tiny_engine
+    fe, _ = _frontend(eng)
+    fe.submit(SearchRequest(queries=q[0]))
+    fe.submit(SearchRequest(queries=q[1], tier="exact"))        # alias of f32
+    fe.submit(SearchRequest(queries=q[2], tier="f32", impl="auto"))
+    assert len(fe._groups) == 1
+
+
+# ------------------------------------------------------- admission control
+
+def test_admission_control_sheds_beyond_max_queue(tiny_engine):
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng, max_queue=2, max_batch=64)
+    admitted = [fe.submit(SearchRequest(queries=q[i])) for i in range(2)]
+    shed = [fe.submit(SearchRequest(queries=q[2 + i])) for i in range(3)]
+    for p in shed:                          # resolved immediately, marked shed
+        assert p.done()
+        res = p.result()
+        assert res.stats.shed and res.stats.batch_size == 0
+        assert (res.ids == -1).all() and not np.isfinite(res.dists).any()
+        assert (res.nprobe_eff == 0).all()
+    stats = fe.stats()
+    assert stats.shed == 3 and stats.depth == 2
+    clock.advance(5e-3)
+    fe.poll()
+    for p in admitted:                      # admitted traffic still correct
+        assert not p.result().stats.shed
+        assert p.result().stats.batch_size == 2
+    assert fe.stats().served == 2
+
+
+def test_priority_displaces_lower_priority_queued(tiny_engine):
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng, max_queue=1, max_batch=64)
+    low = fe.submit(SearchRequest(queries=q[0], priority=0))
+    high = fe.submit(SearchRequest(queries=q[1], priority=1))
+    # the queued low-priority request was shed to admit the newcomer
+    assert low.done() and low.result().stats.shed
+    assert not high.done()
+    # an equal-priority newcomer is shed itself (no churn on ties)
+    equal = fe.submit(SearchRequest(queries=q[2], priority=1))
+    assert equal.done() and equal.result().stats.shed
+    clock.advance(5e-3)
+    fe.poll()
+    assert not high.result().stats.shed
+
+
+def test_priority_orders_oversized_group_flush(tiny_engine):
+    """A group larger than max_batch rows (multi-row requests) flushes as
+    several serve calls, higher-priority requests riding the first one."""
+    eng, q = tiny_engine
+    fe, _ = _frontend(eng, max_queue=64, max_batch=4)
+    assert fe.max_batch == 8                # 4 rounds up to the 8-bucket
+    low = fe.submit(SearchRequest(queries=q[:6], priority=0))   # 6 rows
+    high = fe.submit(SearchRequest(queries=q[6:10], priority=1))  # 4 rows
+    # 10 rows ≥ 8 triggered the flush: high went first and low no longer fit
+    assert fe.stats().batches == 2 and fe.depth() == 0
+    assert high.result().stats.batch_size == 4
+    assert low.result().stats.batch_size == 6
+    # multi-row scatter slices the right rows back per request
+    for j in range(6):
+        solo = eng.search(SearchRequest(queries=q[j:j + 1]))
+        np.testing.assert_array_equal(low.result().dists[j], solo.dists[0])
+
+
+# ------------------------------------------------------------- telemetry
+
+def test_frontend_stats_quantiles_and_qps(tiny_engine):
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng, max_wait_ms=1.0, max_batch=64)
+    for wave in range(4):                   # 4 deadline flushes, 2 reqs each
+        fe.submit(SearchRequest(queries=q[2 * wave]))
+        fe.submit(SearchRequest(queries=q[2 * wave + 1]))
+        clock.advance(1.1e-3)
+        fe.poll()
+    stats = fe.stats()
+    assert stats.submitted == stats.served == 8
+    assert stats.batches == 4 and stats.mean_batch == 2.0
+    # every request waited exactly 1.1 virtual ms — degenerate quantiles
+    assert stats.p50_ms == pytest.approx(1.1)
+    assert stats.p99_ms == pytest.approx(1.1)
+    # 8 queries over the 4.4ms span from first submit to last completion
+    assert stats.qps == pytest.approx(8 / 4.4e-3, rel=1e-6)
+    assert stats.depth == 0 and stats.shed == 0
+
+
+def test_charged_service_time_lands_in_latency(tiny_engine):
+    """charge_service couples measured engine wall time onto the virtual
+    clock — latency telemetry then reflects real serve cost."""
+    eng, q = tiny_engine
+    clock = FakeClock()
+    fe = ServingFrontend(
+        eng, FrontendConfig(max_batch=8, max_wait_ms=2.0), clock=clock,
+        charge_service=True)
+    pends = [fe.submit(SearchRequest(queries=q[i])) for i in range(8)]
+    assert clock() > 0.0                    # the serve call charged the clock
+    assert pends[0].result().stats.queue_ms == 0.0
+    assert fe.stats().p50_ms > 0.0
+
+
+def test_charge_service_requires_advanceable_clock(tiny_engine):
+    eng, _ = tiny_engine
+    import time
+
+    with pytest.raises(TypeError, match="advance"):
+        ServingFrontend(eng, charge_service=True, clock=time.monotonic)
+    fe = ServingFrontend(eng)               # wall clock, no charging: fine
+    with pytest.raises(TypeError, match="advanceable"):
+        simulate_open_loop(fe, np.zeros((1, 16), np.float32),
+                           rate_qps=1.0, n_requests=1)
+
+
+def test_fake_clock_monotonic():
+    clock = FakeClock(10.0)
+    assert clock() == 10.0
+    clock.advance(0.5)
+    assert clock() == 10.5
+    with pytest.raises(ValueError, match="backwards"):
+        clock.advance(-1.0)
+
+
+def test_backdated_arrival_expired_deadline_is_shed(tiny_engine):
+    """A backdated submit whose EXPLICIT deadline already passed is shed
+    outright (dead on arrival) — serving provably-late traffic would burn
+    drain capacity. Without an explicit deadline_ms there is no SLO to blow:
+    a stale backdated submit still queues (merely late), and an on-time one
+    queues with its true arrival driving queue_ms."""
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng, max_wait_ms=2.0)
+    clock.advance(10e-3)
+    dead = fe.submit(SearchRequest(queries=q[0], deadline_ms=5.0),
+                     t_arrival=0.0)
+    assert dead.done() and dead.result().stats.shed
+    # same staleness, no explicit SLO → admitted, not shed
+    stale = fe.submit(SearchRequest(queries=q[2]), t_arrival=0.0)
+    assert not stale.done()
+    live = fe.submit(SearchRequest(queries=q[1]), t_arrival=9e-3)
+    assert not live.done()
+    assert live.flush_by == pytest.approx(11e-3)
+    # the stale request's window expired long ago: next poll flushes both
+    assert fe.poll() == 1
+    assert stale.done() and live.done()
+    # queue wait measured from the true arrival, not the submit call
+    assert live.result().stats.queue_ms == pytest.approx(1.0)
+    assert stale.result().stats.queue_ms == pytest.approx(10.0)
+
+
+# ------------------------------------------------------------ open loop sim
+
+def test_open_loop_low_load_sheds_nothing(tiny_engine):
+    eng, q = tiny_engine
+    clock = FakeClock()
+    fe = ServingFrontend(eng, FrontendConfig(max_batch=8, max_wait_ms=2.0,
+                                             max_queue=32), clock=clock)
+    stats, pendings = simulate_open_loop(fe, q, rate_qps=2000.0, n_requests=40)
+    assert stats.shed == 0 and stats.served == 40
+    assert all(p.done() for p in pendings)
+    # no service charging: every latency is pure queue wait ≤ the window
+    assert stats.p99_ms <= 2.0 + 1e-9
+    assert stats.depth == 0
+
+
+def test_open_loop_overload_sheds_and_serves_rest(tiny_engine):
+    eng, q = tiny_engine
+    clock = FakeClock()
+    fe = ServingFrontend(
+        eng, FrontendConfig(max_batch=64, max_wait_ms=50.0, max_queue=8),
+        clock=clock)
+    # 30 arrivals inside one 50ms window with an 8-deep queue: exactly the
+    # overflow beyond max_queue is shed, everything admitted still answers
+    stats, pendings = simulate_open_loop(fe, q, rate_qps=10_000.0,
+                                         n_requests=30)
+    assert stats.shed > 0 and stats.served == 30 - stats.shed
+    served = [p for p in pendings if not p.result().stats.shed]
+    assert len(served) == stats.served
+    for p in served:
+        assert np.isfinite(p.result().dists[:, 0]).all()
+
+
+# --------------------------------------------------- batched-vs-solo parity
+
+N, NQ, DIM, B = 1200, 12, 16, 8
+
+
+@pytest.fixture(scope="module")
+def parity_engines():
+    """One η>0 build serving all three tiers (pq engine + derived residual
+    engine), mirroring tests/test_scan_paths.py's e2e fixture."""
+    ds = make_vector_dataset("clustered", n=N, n_queries=NQ, dim=DIM,
+                             n_modes=B, center_scale=8.0, spread=0.5,
+                             boundary_frac=0.05, noise_frac=0.0, seed=33)
+    mesh = make_test_mesh()
+    eng = LiraEngine.build(mesh, ds.base, n_partitions=B, k=10, eta=0.03,
+                           train_frac=0.5, epochs=2, nprobe_max=B,
+                           tier="pq", pq_m=4, pq_ks=32, rerank=4)
+    qs = build_quantized_store(jax.random.PRNGKey(9), eng.store["vectors"],
+                               eng.store["ids"], m=4, ks=eng.cfg.pq_ks,
+                               residual=True, centroids=eng.store["centroids"])
+    store_r = {**eng.store, "codes": qs.codes, "codebooks": qs.codebooks,
+               "cterm": qs.cterm}
+    eng_r = LiraEngine(cfg=dataclasses.replace(eng.cfg, tier="residual_pq"),
+                       params=eng.params, store=store_r, mesh=mesh)
+    return eng, eng_r, ds
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("tier", ["f32", "pq", "residual_pq"])
+def test_coalesced_batch_bit_identical_to_solo(parity_engines, tier, impl):
+    """The acceptance gate: results scattered out of a front-end-coalesced
+    batch must be bit-identical to per-request solo ``engine.search`` calls —
+    batching is an optimization, never a semantics change. Note the batch
+    serves through a different jit bucket (12→16) and q_cap than the solo
+    calls (1→8), so this pins row independence of the whole serve step."""
+    eng, eng_r, ds = parity_engines
+    engine = eng_r if tier == "residual_pq" else eng
+    solo = [engine.search(SearchRequest(queries=ds.queries[i:i + 1],
+                                        sigma=0.3, tier=tier, impl=impl))
+            for i in range(NQ)]
+    fe = ServingFrontend(engine, FrontendConfig(max_batch=16, max_wait_ms=1.0,
+                                                max_queue=64),
+                         clock=FakeClock())
+    pends = [fe.submit(SearchRequest(queries=ds.queries[i], sigma=0.3,
+                                     tier=tier, impl=impl))
+             for i in range(NQ)]
+    fe.drain()
+    assert fe.stats().batches == 1          # one coalesced serve call
+    for i, p in enumerate(pends):
+        res = p.result()
+        assert res.stats.batch_size == NQ and not res.stats.shed
+        np.testing.assert_array_equal(res.dists, solo[i].dists, err_msg=str(i))
+        np.testing.assert_array_equal(res.ids, solo[i].ids, err_msg=str(i))
+        np.testing.assert_array_equal(res.nprobe_eff, solo[i].nprobe_eff)
+        assert solo[i].overflow == 0        # parity precondition: no drops
+
+
+def test_search_one_matches_search_with_and_without_frontend(parity_engines):
+    eng, _, ds = parity_engines
+    want = eng.search(SearchRequest(queries=ds.queries[:1], sigma=0.3))
+    eng.frontend = None
+    direct = eng.search_one(SearchRequest(queries=ds.queries[0], sigma=0.3))
+    np.testing.assert_array_equal(direct.dists, want.dists)
+    np.testing.assert_array_equal(direct.ids, want.ids)
+    try:
+        fe = eng.attach_frontend(FrontendConfig(max_batch=16), clock=FakeClock())
+        routed = eng.search_one(SearchRequest(queries=ds.queries[0], sigma=0.3))
+        assert fe.stats().submitted == 1    # went through the queue
+        np.testing.assert_array_equal(routed.dists, want.dists)
+        np.testing.assert_array_equal(routed.ids, want.ids)
+        assert routed.stats.batch_size == 1
+    finally:
+        eng.frontend = None                 # module-scoped engine: detach
+
+
+def test_search_one_rejects_batches_and_raw_arrays(parity_engines):
+    eng, _, ds = parity_engines
+    with pytest.raises(TypeError, match="SearchRequest"):
+        eng.search_one(ds.queries[0])
+    with pytest.raises(ValueError, match="exactly one query"):
+        eng.search_one(SearchRequest(queries=ds.queries[:2]))
+
+
+def test_unpadded_serve_step_matches_frontend_rows(tiny_engine):
+    """Belt-and-braces: a frontend-served row equals the raw unjitted serve
+    step's row for the same batch (ties the front-end scatter to the
+    shard_map path, not just to engine.search)."""
+    eng, q = tiny_engine
+    fe, _ = _frontend(eng, max_batch=8)
+    pends = [fe.submit(SearchRequest(queries=q[i])) for i in range(8)]
+    fn = make_serve_step(eng.cfg, eng.mesh, 8, sigma=-1.0)
+    with eng.mesh:
+        d, i, _, _ = jax.jit(fn)(eng.params, eng.store, jnp.asarray(q[:8]))
+    for r, p in enumerate(pends):
+        np.testing.assert_array_equal(p.result().dists[0], np.asarray(d)[r])
+        np.testing.assert_array_equal(p.result().ids[0], np.asarray(i)[r])
