@@ -75,18 +75,22 @@ def run(emit):
     _, gti = H.get_gt(DATASET, 200)
     gti = gti[:N_QUERIES, :K]
 
+    from benchmarks import roofline
+    from benchmarks.scan_paths import _scan_cost
+
     results = {}
     for label, tier in (("f32", "f32"), ("adc", "pq")):
-        ids = eng.search(q, sigma=SIGMA, tier=tier).ids  # warm jit
+        warm = eng.search(q, sigma=SIGMA, tier=tier)     # warm jit
+        ids = warm.ids
         t0 = time.perf_counter()
         reps = 3
         for _ in range(reps):
             eng.search(q, sigma=SIGMA, tier=tier)
         dt = (time.perf_counter() - t0) / reps
-        results[label] = (dt, recall_at_k(ids, gti, K))
+        results[label] = (dt, recall_at_k(ids, gti, K), warm)
 
     sb = scan_store_bytes(eng.store)
-    (t_f, r_f), (t_q, r_q) = results["f32"], results["adc"]
+    (t_f, r_f, w_f), (t_q, r_q, w_q) = results["f32"], results["adc"]
     emit("quantized_scan/f32_scan", t_f * 1e6,
          f"qps={N_QUERIES/t_f:.0f};recall={r_f:.4f};store_mb={sb['f32']/2**20:.1f}")
     emit("quantized_scan/adc_scan", t_q * 1e6,
@@ -102,7 +106,27 @@ def run(emit):
         raise AssertionError(
             f"quantized recall {r_q:.4f} more than 2% below f32 {r_f:.4f}")
 
-    _run_residual_compare(emit)
+    def _rates(tier_name, warm, dt):
+        probes = float(warm.nprobe_eff.sum()) - warm.overflow
+        flops, bytes_ = _scan_cost(eng.cfg, tier_name, probes, N_QUERIES)
+        return roofline.ceiling_fracs(flops / dt, bytes_ / dt)
+
+    payload = {
+        "suite": "quantized_scan",
+        "config": {"dataset": DATASET, "partitions": B, "k": K,
+                   "n_queries": N_QUERIES, "sigma": SIGMA, "pq_m": PQ_M,
+                   "pq_ks": int(eng.cfg.pq_ks), "rerank": RERANK},
+        "roofline_ceilings": {"peak_flops": roofline.PEAK,
+                              "hbm_bytes_per_s": roofline.HBM},
+        "f32": {"seconds": t_f, "qps": N_QUERIES / t_f, "recall": r_f,
+                "store_bytes": sb["f32"], **_rates("f32", w_f, t_f)},
+        "adc": {"seconds": t_q, "qps": N_QUERIES / t_q, "recall": r_q,
+                "store_bytes": sb["quantized"], **_rates("pq", w_q, t_q)},
+        "bytes_ratio": sb["ratio"],
+        "recall_gap": r_f - r_q,
+    }
+    payload["residual_compare"] = _run_residual_compare(emit)
+    return payload
 
 
 # ------------------------------------------- residual vs non-residual (ISSUE 3)
@@ -189,3 +213,12 @@ def _run_residual_compare(emit):
         raise AssertionError(
             f"residual recall gap {gap_r:.4f} exceeds non-residual gap "
             f"{gap_nr:.4f} on the clustered workload at equal code size")
+    return {
+        "config": {"n": CL_N, "n_queries": CL_Q, "dim": CL_DIM,
+                   "partitions": CL_B, "pq_m": CL_M, "pq_ks": CL_KS,
+                   "rerank": CL_RERANK, "eta": CL_ETA},
+        "recall": {n: recalls[n] for n in ("f32", "nonres", "res")},
+        "seconds": {n: times[n] for n in ("f32", "nonres", "res")},
+        "gap_res": gap_r, "gap_nonres": gap_nr,
+        "bytes_ratio": sb_r["ratio"],
+    }

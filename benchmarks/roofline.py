@@ -25,6 +25,20 @@ HBM = 819e9
 ICI = 50e9
 
 
+def ceiling_fracs(ops_per_s: float, bytes_per_s: float) -> dict:
+    """Roofline-relative achieved rates for a measured suite: the fraction of
+    the bf16 compute peak and of HBM bandwidth a kernel actually sustained.
+    The kernel BENCH_*.json snapshots (scan_paths, quantized_scan) persist
+    these so the perf campaign (ROADMAP item 4) can read each PR's headroom
+    directly — a scan at 2% of HBM is a streaming bug, one at 80% is done."""
+    return {
+        "ops_per_s": ops_per_s,
+        "bytes_per_s": bytes_per_s,
+        "frac_of_peak_flops": ops_per_s / PEAK,
+        "frac_of_hbm_bw": bytes_per_s / HBM,
+    }
+
+
 def load_cells(mesh: str = "single", variant: str = "baseline"):
     cells = []
     for p in sorted(RESULTS.glob(f"*__{mesh}__{variant}.json")):

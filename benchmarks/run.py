@@ -1,9 +1,13 @@
 """Benchmark driver: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV rows (and tees them to results/bench.csv).
 Suites whose ``run`` returns a dict produce a per-PR perf snapshot:
-``--json-out DIR`` writes each as ``DIR/BENCH_<suite>.json`` (the serving
-suite's ``BENCH_serving.json`` is the first — uploaded as a CI artifact so
-wall-clock regressions stop being invisible).
+``--json-out DIR`` writes each as ``DIR/BENCH_<suite>.json``, stamped with
+``schema_version`` so downstream trajectory tooling can detect payload shape
+changes (serving, scan_paths and quantized_scan all snapshot; the kernel
+suites carry roofline-relative ops/s + bytes/s). ``--metrics-out FILE``
+additionally dumps the process metrics registry (repro.obs) as a text
+exposition, and ``--profile-dir DIR`` wraps the whole run in a jax.profiler
+capture for TensorBoard (README "Observability").
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig7] [--json-out .]
 """
@@ -14,6 +18,9 @@ import json
 import pathlib
 import sys
 import time
+
+# bump when the shape of any BENCH_*.json payload changes incompatibly
+SCHEMA_VERSION = 1
 
 SUITES = [
     ("eval_merge", "benchmarks.eval_merge"),
@@ -36,6 +43,12 @@ def main() -> None:
     ap.add_argument("--json-out", default="",
                     help="directory to write BENCH_<suite>.json perf "
                          "snapshots for suites that produce one")
+    ap.add_argument("--metrics-out", default="",
+                    help="file to write the metrics-registry exposition "
+                         "(repro.obs) accumulated across the run")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the whole run into "
+                         "this directory (TensorBoard profile plugin)")
     args = ap.parse_args()
     only = {s for s in args.only.split(",") if s}
     unknown = only - {tag for tag, _ in SUITES}
@@ -55,25 +68,29 @@ def main() -> None:
 
     import importlib
 
+    from repro.obs import profile_capture
+
     failed: list[str] = []
     payloads: dict[str, dict] = {}
     t_all = time.time()
-    for tag, mod_name in SUITES:
-        if only and tag not in only:
-            continue
-        t0 = time.time()
-        try:
-            mod = importlib.import_module(mod_name)
-            payload = mod.run(emit)
-            if isinstance(payload, dict):
-                payloads[tag] = payload
-            emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, "ok")
-        except Exception as e:  # keep the harness going; record the failure
-            failed.append(tag)
-            emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, f"FAIL:{type(e).__name__}:{e}")
-            import traceback
+    with profile_capture(args.profile_dir):
+        for tag, mod_name in SUITES:
+            if only and tag not in only:
+                continue
+            t0 = time.time()
+            try:
+                mod = importlib.import_module(mod_name)
+                payload = mod.run(emit)
+                if isinstance(payload, dict):
+                    payload.setdefault("schema_version", SCHEMA_VERSION)
+                    payloads[tag] = payload
+                emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, "ok")
+            except Exception as e:  # keep the harness going; record the failure
+                failed.append(tag)
+                emit(f"{tag}/_suite_seconds", (time.time() - t0) * 1e6, f"FAIL:{type(e).__name__}:{e}")
+                import traceback
 
-            traceback.print_exc()
+                traceback.print_exc()
     emit("_total_seconds", (time.time() - t_all) * 1e6, "")
     out_path.write_text("\n".join(rows) + "\n")
     if args.json_out:
@@ -83,6 +100,15 @@ def main() -> None:
             f = outdir / f"BENCH_{tag}.json"
             f.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
             print(f"wrote {f}", file=sys.stderr)
+    if args.metrics_out:
+        from repro.obs import default_registry, parse_exposition
+
+        text = default_registry().render()
+        parse_exposition(text)  # malformed exposition must fail the run
+        mp = pathlib.Path(args.metrics_out)
+        mp.parent.mkdir(parents=True, exist_ok=True)
+        mp.write_text(text)
+        print(f"wrote {mp}", file=sys.stderr)
     if failed:  # a half-run must not look green (CI smoke relies on this)
         print(f"FAILED suites: {','.join(failed)}", file=sys.stderr)
         sys.exit(1)

@@ -67,14 +67,45 @@ def _engines():
     return eng, eng_r, ds
 
 
+def _scan_cost(cfg, tier_name: str, n_probes: float, nq: int):
+    """Analytic (flops, bytes) for one serve call's scan stage — the work the
+    measured wall time is divided into for roofline-relative rates. Per
+    dispatched probe the scan touches one partition of ``capacity`` slots:
+
+      f32:        2·cap·d flops (squared-L2 MACs), cap·d·dtype + cap·4 bytes
+      pq:         2·cap·m ADC lookup-adds over uint8 codes, then an exact
+                  rerank of rk = min(cap, rerank·k) shortlist rows; plus a
+                  per-query LUT build of 2·m·ks·d flops / m·ks·4 bytes
+      residual:   pq + the cterm plane (cap·4 bytes, cap adds)
+
+    This is a lower-bound work model (top-k and scatter excluded), so the
+    roofline fractions it yields are conservative."""
+    cap, d, m, ks = cfg.capacity, cfg.dim, cfg.pq_m, cfg.pq_ks
+    if tier_name == "f32":
+        dtype_bytes = 2 if cfg.store_dtype == "bfloat16" else 4
+        return (2.0 * cap * d * n_probes,
+                (cap * d * dtype_bytes + cap * 4) * n_probes)
+    rk = min(cap, cfg.rerank * cfg.k)
+    flops = (2.0 * cap * m + 2.0 * rk * d) * n_probes + 2.0 * m * ks * d * nq
+    bytes_ = (cap * m + rk * d * 4 + cap * 4) * n_probes + m * ks * 4 * nq
+    if tier_name == "residual_pq":
+        flops += cap * n_probes
+        bytes_ += cap * 4 * n_probes
+    return flops, bytes_
+
+
 def run(emit):
+    from benchmarks import roofline
+
     eng, eng_r, ds = _engines()
     q = ds.queries[:NQ]
     mismatches = []
+    payload_tiers = {}
     for tier, engine, tier_name in (("f32", eng, "f32"),
                                     ("quantized", eng, "pq"),
                                     ("residual", eng_r, "residual_pq")):
         results = {}
+        rows = {}
         for impl in ("ref", "interpret"):
             engine.search(q, sigma=SIGMA, tier=tier_name, impl=impl)  # warm jit
             t0 = time.perf_counter()
@@ -83,6 +114,15 @@ def run(emit):
             d, ids, npb, ovf = (res.dists, res.ids, res.nprobe_eff,
                                 res.overflow)
             results[impl] = (dt, d, ids, npb, ovf)
+            # dispatched probes = σ-selected minus q_cap-dropped
+            flops, bytes_ = _scan_cost(engine.cfg, tier_name,
+                                       float(npb.sum()) - ovf, NQ)
+            rows[impl] = {
+                "seconds": dt, "qps": NQ / dt,
+                "nprobe_mean": float(npb.mean()), "overflow": int(ovf),
+                "dedup_hits": int(res.stats.dedup_hits),
+                **roofline.ceiling_fracs(flops / dt, bytes_ / dt),
+            }
             emit(f"scan_paths/{tier}_{impl}", dt * 1e6,
                  f"qps={NQ/dt:.0f};nprobe={npb.mean():.2f};overflow={ovf}")
         (t_r, d_r, i_r, np_r, o_r), (t_k, d_k, i_k, np_k, o_k) = \
@@ -98,10 +138,25 @@ def run(emit):
              f"counters_identical={same_ct};kernel_over_ref=x{t_k/t_r:.2f}")
         if not (bit_d and same_i and same_ct):
             mismatches.append(tier)
+        payload_tiers[tier] = {
+            **rows, "parity": {"dists_bit_identical": bit_d,
+                               "ids_set_identical": same_i,
+                               "counters_identical": same_ct},
+            "kernel_over_ref": t_k / t_r,
+        }
     if mismatches:
         raise AssertionError(
             f"scan kernel/oracle drift on tier(s) {','.join(mismatches)}: "
             "serving/scan.py impls disagree — see scan_paths/*_parity rows")
+    return {
+        "suite": "scan_paths",
+        "config": {"n": N, "n_queries": NQ, "dim": DIM, "partitions": B,
+                   "k": K, "sigma": SIGMA, "eta": ETA, "pq_m": PQ_M,
+                   "pq_ks": PQ_KS, "rerank": RERANK, "nprobe_max": NPROBE},
+        "roofline_ceilings": {"peak_flops": roofline.PEAK,
+                              "hbm_bytes_per_s": roofline.HBM},
+        "tiers": payload_tiers,
+    }
 
 
 if __name__ == "__main__":

@@ -140,7 +140,11 @@ class FrontendConfig:
     max_batch: int = 64             # size trigger, in coalesced query rows
     max_wait_ms: float = 2.0        # deadline trigger for queued requests
     max_queue: int = 256            # admission-control bound, in requests
-    latency_window: int = 1024      # rolling p50/p99 reservoir size
+    # retired knob, accepted for config compatibility: latency quantiles now
+    # come from fixed-bucket histograms in the metrics registry
+    # (repro.obs.metrics — O(buckets) memory for any service lifetime), so
+    # there is no per-observation reservoir left to size
+    latency_window: int = 1024
 
 
 # builtin serving-tier aliases → canonical names. Must mirror the `aliases`

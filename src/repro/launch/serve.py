@@ -43,6 +43,14 @@ def main():
                          "the fused kernels on TPU, the portable jnp path "
                          "elsewhere; interpret forces the kernels through the "
                          "Pallas interpreter for parity checks")
+    ap.add_argument("--profile-dir", default="",
+                    help="capture a jax.profiler trace of the serving section "
+                         "into this directory; open with TensorBoard's "
+                         "profile plugin (op_profile groups device time under "
+                         "the lira.probing/dispatch/scan/merge named scopes)")
+    ap.add_argument("--trace-out", default="",
+                    help="stream host-side serving spans (repro.obs.trace) to "
+                         "this JSON-lines file")
     args = ap.parse_args()
     tier = args.tier
     if args.quantized or args.residual:
@@ -63,14 +71,27 @@ def main():
         print(f"  {tier} tier: m={engine.cfg.pq_m} ks={engine.cfg.pq_ks} "
               f"rerank={engine.cfg.rerank}; scan store x{sb['ratio']:.1f} smaller")
 
+    from repro.obs import Tracer, default_registry, profile_capture
+
+    if args.trace_out:
+        engine.tracer = Tracer(sink=args.trace_out)
+
     print(f"serving {args.queries} queries…")
-    t0 = time.time()
-    res = engine.search(SearchRequest(queries=ds.queries, sigma=args.sigma))
-    dt = time.time() - t0
+    with profile_capture(args.profile_dir):
+        t0 = time.time()
+        res = engine.search(SearchRequest(queries=ds.queries, sigma=args.sigma))
+        dt = time.time() - t0
     print(f"  {args.queries/dt:.0f} QPS local; adaptive nprobe "
           f"mean={res.nprobe_eff.mean():.2f}; dropped probes (q_cap overflow)="
-          f"{res.overflow}; bucket={res.stats.bucket} "
-          f"cache_hit={res.stats.cache_hit}")
+          f"{res.overflow}; dedup_hits={res.stats.dedup_hits}; "
+          f"bucket={res.stats.bucket} cache_hit={res.stats.cache_hit}")
+    if res.stats.stages is not None:
+        breakdown = " ".join(f"{name}={ms:.2f}ms"
+                             for name, ms in res.stats.stages.items())
+        print(f"  stages: {breakdown} (e2e {res.stats.latency_ms:.2f}ms)")
+    if args.profile_dir:
+        print(f"  profiler trace in {args.profile_dir} — "
+              "tensorboard --logdir there, Profile > op_profile")
 
     # online front-end: single-query stream through the dynamic batcher
     # (virtual clock, real serve cost charged onto it — serving/frontend.py)
@@ -105,6 +126,18 @@ def main():
     rng = np.random.default_rng(0)
     lat = [mit.serve(float(rng.lognormal(0, 0.2))) for _ in range(200)]
     print(f"  hedged p99={np.quantile(lat, 0.99):.2f}× base ({mit.hedges} hedges)")
+
+    # registry snapshot: the cumulative counters this process accumulated
+    reg = default_registry()
+    print(f"  metrics: overflow_rate={engine.overflow_rate():.4f} "
+          f"searches={reg.counter('lira_engine_searches_total').total():.0f} "
+          f"jit_misses="
+          f"{reg.counter('lira_engine_jit_cache_misses_total').total():.0f} "
+          f"dedup_hits="
+          f"{reg.counter('lira_engine_dedup_hits_total').total():.0f}")
+    if args.trace_out:
+        engine.tracer.close()
+        print(f"  spans streamed to {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,18 @@
+"""Observability: metrics registry, span tracing, and profiler capture.
+
+The measurement half of the perf campaign (ROADMAP item 4): every serving
+stage is spanned, every query-aware distribution (nprobe_eff, overflow,
+replica-dedup, batch shape) is a registry metric, and kernel suites persist
+roofline-relative BENCH_*.json snapshots. See README "Observability".
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry, parse_exposition)
+from repro.obs.profiling import profile_capture
+from repro.obs.trace import NOOP, Span, Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "parse_exposition",
+    "Span", "Tracer", "NOOP",
+    "profile_capture",
+]

@@ -120,6 +120,15 @@ class SearchStats:
     queue_ms: float = 0.0           # time spent queued before the batch launched
     batch_size: int = 0             # coalesced rows in the batch that served this
     shed: bool = False              # True = dropped by admission control, no answer
+    # ---- observability fields (repro.obs): replica-dedup hits are candidate
+    # slots the merge collapsed because redundancy (η>0) returned the same id
+    # from several partitions/shards — the paper's replication cost made
+    # visible. stages/latency_ms are populated only when a Tracer is attached
+    # (engine.tracer / front-end tracer=); stage values are milliseconds and
+    # sum to ≈ latency_ms (see README "Observability" for the hierarchy).
+    dedup_hits: int = 0             # duplicate candidate slots merged away
+    latency_ms: float = 0.0         # end-to-end latency (0.0 when not traced)
+    stages: Optional[dict] = None   # {"queue": ms, "serve.device": ms, ...}
 
 
 @dataclasses.dataclass

@@ -57,6 +57,8 @@ from repro.kernels import ops as kops
 from repro.models.api import ModelBundle, StepDef, adamw_state_pspecs, adamw_state_specs, sds
 from repro.train import optimizer as opt
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving import api
 from repro.serving import scan
 from repro.serving import tiers
@@ -96,11 +98,32 @@ def store_pspecs(mesh, cfg: LiraSystemConfig | None = None):
 
 # ------------------------------------------------------------- serve step
 
+def _dup_count(ids_pool):
+    """Count duplicate id slots per candidate pool row ([nq, pool]): valid
+    slots (id ≥ 0) minus distinct ids, summed over queries. This is the
+    replica-dedup hit count — how many candidate slots the η-redundancy
+    replicas burned on ids another partition already supplied.
+
+    Counted at each merge the serve step actually runs (local pool, then the
+    gathered cross-shard top-k), so under model sharding it is a lower bound
+    on the full-pool duplicate count: a cross-shard duplicate pair where one
+    copy misses its shard's local top-k is never observed (counting it would
+    require gathering whole pools — O(Q·pool·shards) traffic instead of the
+    O(Q·k) the merge is designed around). Results stay bit-identical across
+    shardings; only this telemetry is merge-local."""
+    s = jnp.sort(ids_pool, axis=1)
+    valid = s >= 0
+    first = jnp.concatenate(
+        [jnp.ones_like(s[:, :1], jnp.bool_), s[:, 1:] != s[:, :-1]], axis=1)
+    return (valid.sum(1) - (valid & first).sum(1)).sum().astype(jnp.int32)
+
+
 def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float = 0.5,
                     q_cap_factor: float | None = None,
                     tier: str | tiers.Tier | None = None,
                     impl: str | None = None,
-                    k: int | None = None):
+                    k: int | None = None,
+                    count_dedup: bool = False):
     _, bspec, bprod = batch_mesh_info(mesh)
     model_n = mesh.shape.get("model", 1)
     q_row = n_queries // bprod
@@ -122,76 +145,101 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         # q_loc: [q_row, d]; valid_loc: [q_row] bool (False = batch padding);
         # vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
         # extras: the tier's non-base store fields, in declaration order
-        cd = (
-            jnp.sum(q_loc * q_loc, -1, keepdims=True)
-            - 2.0 * q_loc @ cents.T
-            + jnp.sum(cents * cents, -1)[None, :]
-        )
-        p = jax.nn.sigmoid(probing.apply(params, q_loc, cd))        # [q_row, B]
-        vals, pidx = jax.lax.top_k(p, cfg.nprobe_max)               # global partitions
-        probe_ok = vals > sigma
-        probe_ok = probe_ok.at[:, 0].set(True)                      # always ≥1 partition
-        # batch-padding rows must not probe: a pad query occupying q_cap slots
-        # can evict a real query's probes in small buckets
-        probe_ok = probe_ok & valid_loc[:, None]
+        # jax.named_scope labels the serving stages in profiler captures
+        # (TensorBoard op_profile groups HLO ops under these names — the
+        # --profile-dir recipe in README "Observability"); it is a pure
+        # metadata annotation with zero effect on the computation
+        with jax.named_scope("lira.probing"):
+            cd = (
+                jnp.sum(q_loc * q_loc, -1, keepdims=True)
+                - 2.0 * q_loc @ cents.T
+                + jnp.sum(cents * cents, -1)[None, :]
+            )
+            p = jax.nn.sigmoid(probing.apply(params, q_loc, cd))    # [q_row, B]
+            vals, pidx = jax.lax.top_k(p, cfg.nprobe_max)           # global partitions
+            probe_ok = vals > sigma
+            probe_ok = probe_ok.at[:, 0].set(True)                  # always ≥1 partition
+            # batch-padding rows must not probe: a pad query occupying q_cap
+            # slots can evict a real query's probes in small buckets
+            probe_ok = probe_ok & valid_loc[:, None]
 
         # ---- dispatch (sort-based, local partition range only)
-        b0 = jax.lax.axis_index("model") * b_loc if model_n > 1 else 0
-        flat_p = pidx.reshape(-1) - b0
-        flat_ok = probe_ok.reshape(-1) & (flat_p >= 0) & (flat_p < b_loc)
-        flat_q = jnp.broadcast_to(jnp.arange(q_row)[:, None], pidx.shape).reshape(-1)
-        key = jnp.where(flat_ok, flat_p, b_loc)
-        order = jnp.argsort(key, stable=True)
-        skey = key[order]
-        start = jnp.searchsorted(skey, jnp.arange(b_loc + 1))
-        pos = jnp.arange(skey.shape[0]) - start[jnp.clip(skey, 0, b_loc)]
-        keep = (skey < b_loc) & (pos < q_cap)
-        # probes beyond a hot partition's q_cap are dropped — count them so
-        # recall degradation is reported, not silent (raise q_cap_factor or
-        # rebalance partitions when this is persistently > 0)
-        overflow = ((skey < b_loc) & (pos >= q_cap)).sum().astype(jnp.int32)
-        row = jnp.where(keep, skey, b_loc)
-        col = jnp.where(keep, pos, 0)
-        qbuf = jnp.full((b_loc, q_cap), q_row, jnp.int32).at[row, col].set(
-            flat_q[order], mode="drop")                              # q_row = invalid
+        with jax.named_scope("lira.dispatch"):
+            b0 = jax.lax.axis_index("model") * b_loc if model_n > 1 else 0
+            flat_p = pidx.reshape(-1) - b0
+            flat_ok = probe_ok.reshape(-1) & (flat_p >= 0) & (flat_p < b_loc)
+            flat_q = jnp.broadcast_to(jnp.arange(q_row)[:, None], pidx.shape).reshape(-1)
+            key = jnp.where(flat_ok, flat_p, b_loc)
+            order = jnp.argsort(key, stable=True)
+            skey = key[order]
+            start = jnp.searchsorted(skey, jnp.arange(b_loc + 1))
+            pos = jnp.arange(skey.shape[0]) - start[jnp.clip(skey, 0, b_loc)]
+            keep = (skey < b_loc) & (pos < q_cap)
+            # probes beyond a hot partition's q_cap are dropped — count them so
+            # recall degradation is reported, not silent (raise q_cap_factor or
+            # rebalance partitions when this is persistently > 0)
+            overflow = ((skey < b_loc) & (pos >= q_cap)).sum().astype(jnp.int32)
+            row = jnp.where(keep, skey, b_loc)
+            col = jnp.where(keep, pos, 0)
+            qbuf = jnp.full((b_loc, q_cap), q_row, jnp.int32).at[row, col].set(
+                flat_q[order], mode="drop")                          # q_row = invalid
 
         # ---- per-partition scan: backend-dispatched (serving/scan.py); the
         # tier derives its extra scan operands (ADC LUTs, shortlist depth,
         # residual offsets, …) from the serve-step context — {} = plain f32
-        q_pad = jnp.concatenate([q_loc, jnp.full((1, q_loc.shape[1]), 1e9, q_loc.dtype)], 0)
-        ctx = tiers.ScanContext(q_loc=q_loc, q_pad=q_pad, cd=cd, b0=b0,
-                                b_loc=b_loc, k=k)
-        scan_kw = tier.scan_kwargs(cfg, ctx, dict(zip(extra_fields, extras)))
-        dists, rids = scan.run(scan_impl, qbuf, q_pad, vecs_loc, ids_loc, k,
-                               **scan_kw)
+        with jax.named_scope("lira.scan"):
+            q_pad = jnp.concatenate([q_loc, jnp.full((1, q_loc.shape[1]), 1e9, q_loc.dtype)], 0)
+            ctx = tiers.ScanContext(q_loc=q_loc, q_pad=q_pad, cd=cd, b0=b0,
+                                    b_loc=b_loc, k=k)
+            scan_kw = tier.scan_kwargs(cfg, ctx, dict(zip(extra_fields, extras)))
+            dists, rids = scan.run(scan_impl, qbuf, q_pad, vecs_loc, ids_loc, k,
+                                   **scan_kw)
 
         # ---- scatter back per query, local merge
-        out_d = jnp.full((q_row + 1, b_loc, k), jnp.inf, jnp.float32)
-        out_i = jnp.full((q_row + 1, b_loc, k), -1, jnp.int32)
-        cols = jnp.broadcast_to(jnp.arange(b_loc)[:, None], qbuf.shape)
-        out_d = out_d.at[qbuf, cols].set(dists, mode="drop")
-        out_i = out_i.at[qbuf, cols].set(rids, mode="drop")
-        # replica-aware local merge: redundancy (η>0) stores the same id in
-        # several partitions, so a plain top-k would return duplicate ids and
-        # corrupt recall@k — dedup to best-distance-per-id instead (backend
-        # dispatch: bitonic Pallas kernel on TPU, jnp sorts elsewhere)
-        loc_d, loc_i = kops.dedup_topk(
-            out_d[:q_row].reshape(q_row, -1), out_i[:q_row].reshape(q_row, -1), k)
+        with jax.named_scope("lira.merge"):
+            out_d = jnp.full((q_row + 1, b_loc, k), jnp.inf, jnp.float32)
+            out_i = jnp.full((q_row + 1, b_loc, k), -1, jnp.int32)
+            cols = jnp.broadcast_to(jnp.arange(b_loc)[:, None], qbuf.shape)
+            out_d = out_d.at[qbuf, cols].set(dists, mode="drop")
+            out_i = out_i.at[qbuf, cols].set(rids, mode="drop")
+            pool_i = out_i[:q_row].reshape(q_row, -1)
+            # replica-dedup hit rate (only when asked for: the extra output
+            # changes the step signature, so make_bundle and direct callers
+            # keep the 4-output form) — measured BEFORE each dedup pass so it
+            # counts exactly the duplicate slots the merges collapse
+            dedup_hits = _dup_count(pool_i) if count_dedup else None
+            # replica-aware local merge: redundancy (η>0) stores the same id in
+            # several partitions, so a plain top-k would return duplicate ids
+            # and corrupt recall@k — dedup to best-distance-per-id instead
+            # (backend dispatch: bitonic Pallas kernel on TPU, jnp elsewhere)
+            loc_d, loc_i = kops.dedup_topk(
+                out_d[:q_row].reshape(q_row, -1), pool_i, k)
 
-        # ---- cross-shard merge (O(Q·k·shards) bytes — independent of N);
-        # replicas of one id can live on different shards, so dedup again
-        if model_n > 1:
-            all_d = jax.lax.all_gather(loc_d, "model", axis=1, tiled=True)   # [q_row, 16k]
-            all_i = jax.lax.all_gather(loc_i, "model", axis=1, tiled=True)
-            loc_d, loc_i = kops.dedup_topk(all_d, all_i, k)
-            overflow = jax.lax.psum(overflow, "model")
+            # ---- cross-shard merge (O(Q·k·shards) bytes — independent of N);
+            # replicas of one id can live on different shards, so dedup again
+            if model_n > 1:
+                all_d = jax.lax.all_gather(loc_d, "model", axis=1, tiled=True)   # [q_row, 16k]
+                all_i = jax.lax.all_gather(loc_i, "model", axis=1, tiled=True)
+                if count_dedup:
+                    # local hits differ per shard → psum; the gathered pool is
+                    # identical on every model shard → count it exactly once
+                    dedup_hits = (jax.lax.psum(dedup_hits, "model")
+                                  + _dup_count(all_i))
+                loc_d, loc_i = kops.dedup_topk(all_d, all_i, k)
+                overflow = jax.lax.psum(overflow, "model")
         nprobe_eff = probe_ok.sum(-1).astype(jnp.float32)
+        if count_dedup:
+            return loc_d, loc_i, nprobe_eff, overflow[None], dedup_hits[None]
         return loc_d, loc_i, nprobe_eff, overflow[None]
 
     param_spec = jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg))
     in_specs = (P(bspec, None), P(bspec), param_spec,
                 pspec_map["centroids"], pspec_map["vectors"], pspec_map["ids"],
                 *(pspec_map[n] for n in extra_fields))
+
+    out_specs = (P(bspec, None), P(bspec, None), P(bspec), P(bspec))
+    if count_dedup:
+        out_specs = out_specs + (P(bspec),)
 
     def serve_step(params, store, queries, valid=None):
         if valid is None:
@@ -201,7 +249,7 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
         return shard_map(
             f, mesh=mesh,
             in_specs=in_specs,
-            out_specs=(P(bspec, None), P(bspec, None), P(bspec), P(bspec)),
+            out_specs=out_specs,
             check_vma=False,
         )(*args)
 
@@ -319,10 +367,24 @@ class LiraEngine:
     # through it when present. Not part of engine identity or checkpoints.
     frontend: Optional[object] = dataclasses.field(default=None, repr=False,
                                                    compare=False)
+    # observability (repro.obs): tracer=None means spans are free no-ops
+    # (obs_trace.NOOP); metrics=None records into the process-wide
+    # default_registry(). Neither participates in identity or checkpoints.
+    tracer: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                 compare=False)
+    metrics: Optional[object] = dataclasses.field(default=None, repr=False,
+                                                  compare=False)
     _serve_cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                            compare=False)
     _overflow_streak: int = dataclasses.field(default=0, repr=False,
                                               compare=False)
+
+    def _tracer(self):
+        return self.tracer if self.tracer is not None else obs_trace.NOOP
+
+    def _registry(self) -> obs_metrics.MetricsRegistry:
+        return (self.metrics if self.metrics is not None
+                else obs_metrics.default_registry())
 
     @classmethod
     def build(cls, mesh, x: np.ndarray, config: api.BuildConfig | None = None,
@@ -422,7 +484,7 @@ class LiraEngine:
         if fn is None:
             fn = jax.jit(make_serve_step(self.cfg, self.mesh, nq_pad,
                                          sigma=float(sigma), tier=tier,
-                                         impl=impl, k=k))
+                                         impl=impl, k=k, count_dedup=True))
         self._serve_cache[key] = fn  # re-insert: dict order doubles as LRU
         while len(self._serve_cache) > self._SERVE_CACHE_MAX:
             self._serve_cache.pop(next(iter(self._serve_cache)))
@@ -468,38 +530,101 @@ class LiraEngine:
             req = api.SearchRequest(queries=queries, k=k, sigma=sigma,
                                     tier=tier, impl=impl)
 
-        sigma = self.sigma if req.sigma is None else req.sigma
-        tier_obj = tiers.resolve(req.tier if req.tier is not None else self.cfg.tier)
-        k = self.cfg.k if req.k is None else int(req.k)
-        missing = [f for f in tier_obj.store_specs(self.cfg)
-                   if f not in self.store]
-        if missing:
-            raise ValueError(
-                f"engine store lacks {missing} required by tier "
-                f"{tier_obj.name!r}; build with tier={tier_obj.name!r}")
-        tier_obj.check_servable(self.cfg)  # e.g. pq refuses residual codes
-        nq = req.queries.shape[0]
-        nq_pad = self._batch_bucket(nq)
-        fn, cache_hit, impl = self.serve_fn(nq_pad, sigma, tier_obj.name,
-                                            req.impl, k)
-        qp = np.zeros((nq_pad, self.cfg.dim), np.float32)
-        qp[:nq] = req.queries
-        # pad rows are masked out of dispatch: they must not probe partitions
-        # or occupy q_cap slots that real queries need
-        valid = np.zeros((nq_pad,), bool)
-        valid[:nq] = True
-        with self.mesh:
-            d, i, npb, ovf = fn(self.params, self.store, jnp.asarray(qp),
-                                jnp.asarray(valid))
+        tr = self._tracer()
+        # tracing wraps host-side stage boundaries in spans but never alters
+        # the computation: the device call and the unconditional
+        # block_until_ready run identically traced or not, which is what
+        # makes tracing-on bit-identical to tracing-off (pinned in
+        # tests/test_obs.py)
+        with tr.span("engine.search") as sp_root:
+            with tr.span("engine.prepare") as sp_prep:
+                sigma = self.sigma if req.sigma is None else req.sigma
+                tier_obj = tiers.resolve(
+                    req.tier if req.tier is not None else self.cfg.tier)
+                k = self.cfg.k if req.k is None else int(req.k)
+                missing = [f for f in tier_obj.store_specs(self.cfg)
+                           if f not in self.store]
+                if missing:
+                    raise ValueError(
+                        f"engine store lacks {missing} required by tier "
+                        f"{tier_obj.name!r}; build with tier={tier_obj.name!r}")
+                tier_obj.check_servable(self.cfg)  # e.g. pq refuses residual codes
+                nq = req.queries.shape[0]
+                nq_pad = self._batch_bucket(nq)
+                fn, cache_hit, impl = self.serve_fn(nq_pad, sigma,
+                                                    tier_obj.name, req.impl, k)
+                qp = np.zeros((nq_pad, self.cfg.dim), np.float32)
+                qp[:nq] = req.queries
+                # pad rows are masked out of dispatch: they must not probe
+                # partitions or occupy q_cap slots that real queries need
+                valid = np.zeros((nq_pad,), bool)
+                valid[:nq] = True
+            with tr.span("engine.device", tier=tier_obj.name, impl=impl,
+                         bucket=nq_pad, cache_hit=cache_hit) as sp_dev:
+                with self.mesh:
+                    out = fn(self.params, self.store, jnp.asarray(qp),
+                             jnp.asarray(valid))
+                d, i, npb, ovf, dups = jax.block_until_ready(out)
+            with tr.span("engine.post") as sp_post:
+                npb_np = np.asarray(npb)[:nq]
+                overflow = int(np.asarray(ovf).sum())
+                dedup_hits = int(np.asarray(dups).sum())
+                dists = np.asarray(d)[:nq]
+                ids_np = np.asarray(i)[:nq]
+            sp_root.set(tier=tier_obj.name, impl=impl, rows=nq)
+
+        stages = None
+        if tr.enabled:
+            stages = {"prepare": sp_prep.duration_ms,
+                      "device": sp_dev.duration_ms,
+                      "post": sp_post.duration_ms}
+
+        lbl = {"tier": tier_obj.name, "impl": impl}
+        m = self._registry()
+        m.counter("lira_engine_searches_total",
+                  "engine.search calls").inc(**lbl)
+        m.counter("lira_engine_rows_total",
+                  "query rows served (pre-padding)").inc(nq, **lbl)
+        m.counter("lira_engine_probes_total",
+                  "effective partition probes dispatched").inc(
+                      float(npb_np.sum()), **lbl)
+        m.counter("lira_engine_overflow_probes_total",
+                  "probes dropped by q_cap bucket overflow").inc(
+                      overflow, **lbl)
+        m.counter("lira_engine_dedup_hits_total",
+                  "replica-duplicate candidate slots merged away").inc(
+                      dedup_hits, **lbl)
+        m.counter("lira_engine_jit_cache_hits_total" if cache_hit
+                  else "lira_engine_jit_cache_misses_total",
+                  "serve-step jit cache").inc(**lbl)
+        m.histogram("lira_engine_nprobe_eff",
+                    "effective probes per query (σ-adaptive fan-out)",
+                    buckets=obs_metrics.NPROBE_BUCKETS).observe_many(
+                        npb_np, **lbl)
+        m.gauge("lira_engine_q_cap_factor",
+                "current dispatch-slack factor").set(
+                    float(self.cfg.q_cap_factor))
+
         result = api.SearchResult(
-            dists=np.asarray(d)[:nq], ids=np.asarray(i)[:nq],
-            nprobe_eff=np.asarray(npb)[:nq], overflow=int(np.asarray(ovf).sum()),
+            dists=dists, ids=ids_np,
+            nprobe_eff=npb_np, overflow=overflow,
             stats=api.SearchStats(
                 tier=tier_obj.name, impl=impl, k=k, sigma=float(sigma),
-                bucket=nq_pad, cache_hit=cache_hit))
+                bucket=nq_pad, cache_hit=cache_hit, dedup_hits=dedup_hits,
+                latency_ms=sp_root.duration_ms, stages=stages))
         if getattr(self.cfg, "auto_q_cap", False):
             self._maybe_bump_q_cap(result.overflow)
         return result
+
+    def overflow_rate(self) -> float:
+        """Cumulative q_cap overflow rate: dropped probes / attempted probes
+        (attempted = dispatched + dropped), across every tier/impl this
+        engine's registry has seen. 0.0 until any search ran."""
+        m = self._registry()
+        dropped = m.counter("lira_engine_overflow_probes_total").total()
+        dispatched = m.counter("lira_engine_probes_total").total()
+        denom = dropped + dispatched
+        return dropped / denom if denom > 0 else 0.0
 
     # ------------------------------------------------------------ front-end
 
@@ -546,6 +671,16 @@ class LiraEngine:
                 self.cfg, q_cap_factor=self.cfg.q_cap_factor * 2.0)
             self._serve_cache.clear()
             self._overflow_streak = 0
+            # adaptation events are observable, not silent cache drops: the
+            # bump counter + gauge pair shows WHEN the control loop fired and
+            # WHERE the slack factor ended up
+            m = self._registry()
+            m.counter("lira_engine_q_cap_bumps_total",
+                      "auto_q_cap adaptations (doubled q_cap_factor, "
+                      "dropped serve cache)").inc()
+            m.gauge("lira_engine_q_cap_factor",
+                    "current dispatch-slack factor").set(
+                        float(self.cfg.q_cap_factor))
 
     # ------------------------------------------------------------ persistence
 

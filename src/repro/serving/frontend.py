@@ -20,9 +20,15 @@ tail latency). ``ServingFrontend`` is that layer:
     with an empty answer marked ``SearchStats.shed=True``, keeping tail
     latency bounded for the traffic that is admitted;
   * **latency telemetry** — every served request records its queue wait and
-    end-to-end latency against the injected clock; ``stats()`` snapshots
-    rolling p50/p99, QPS, shed/served counters and mean coalesced batch size
-    as a ``FrontendStats``.
+    end-to-end latency against the injected clock, into log-spaced histograms
+    in a metrics registry (repro.obs.metrics) labeled ``frontend=<name>`` —
+    O(buckets) memory for a long-lived process, unlike the per-observation
+    reservoir it replaces. ``stats()`` snapshots p50/p99 (bucket-interpolated,
+    clamped to the observed min/max), QPS, shed/served counters and mean
+    coalesced batch size as a ``FrontendStats``. With a tracer attached
+    (``tracer=`` here or on the engine) each served request's
+    ``SearchStats.stages`` carries the queue → assemble → serve.* breakdown
+    and per-stage histograms aggregate across requests.
 
 Scatter is exact: each coalesced batch's rows are sliced back into
 per-request ``SearchResult``s that are bit-identical to a solo
@@ -41,14 +47,15 @@ group early rather than deadlocking).
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
+import itertools
 import time
 from typing import Callable, Optional
 
 import numpy as np
 
 from repro.configs.base import FrontendConfig
+from repro.obs import metrics as obs_metrics
 from repro.serving import api, scan, tiers
 
 __all__ = ["FakeClock", "FrontendConfig", "FrontendStats", "PendingSearch",
@@ -75,9 +82,13 @@ class FakeClock:
 
 @dataclasses.dataclass(frozen=True)
 class FrontendStats:
-    """Telemetry snapshot (``ServingFrontend.stats()``). Latency quantiles are
-    over the rolling reservoir of the last ``latency_window`` served requests;
-    QPS is served rows over the first-submit → last-completion span."""
+    """Telemetry snapshot (``ServingFrontend.stats()``), read back from the
+    metrics registry. Latency quantiles are bucket-interpolated from the
+    cumulative ``lira_frontend_latency_ms`` histogram (clamped to the exact
+    observed min/max, so degenerate distributions report exactly); QPS is
+    served rows over the first-submit → last-completion span, reported only
+    once ≥ 2 requests completed (a single completion has no span to divide
+    by, so it reads 0.0 instead of a garbage rate)."""
 
     submitted: int                  # requests accepted into the front-end
     served: int                     # requests answered (excludes shed)
@@ -85,8 +96,8 @@ class FrontendStats:
     batches: int                    # engine serve calls issued
     depth: int                      # requests currently queued
     mean_batch: float               # mean coalesced rows per serve call
-    p50_ms: float                   # rolling median end-to-end latency
-    p99_ms: float                   # rolling tail latency
+    p50_ms: float                   # median end-to-end latency
+    p99_ms: float                   # tail latency
     qps: float                      # served query rows / observed span
 
 
@@ -118,6 +129,9 @@ class PendingSearch:
         return self._result
 
 
+_FE_NAMES = itertools.count()
+
+
 class ServingFrontend:
     """Dynamic-batching request queue in front of one ``LiraEngine``.
 
@@ -126,12 +140,20 @@ class ServingFrontend:
     ``service_timer``) is charged onto the clock via ``clock.advance`` — how
     the open-loop simulation keeps deterministic arrivals while latencies
     still reflect real serve cost.
+
+    Telemetry lives in a metrics registry (``metrics=``, defaulting to the
+    engine's) under ``lira_frontend_*`` series labeled ``frontend=<name>``;
+    the name is auto-generated per instance so several front-ends sharing the
+    process-wide default registry never mix their distributions. ``tracer=``
+    (defaulting to the engine's) spans each batch — see README
+    "Observability" for the span hierarchy.
     """
 
     def __init__(self, engine, config: FrontendConfig | None = None, *,
                  clock: Callable[[], float] = time.monotonic,
                  charge_service: bool = False,
-                 service_timer: Callable[[], float] = time.perf_counter):
+                 service_timer: Callable[[], float] = time.perf_counter,
+                 tracer=None, metrics=None, name: Optional[str] = None):
         self.engine = engine
         self.cfg = config if config is not None else FrontendConfig()
         if charge_service and not hasattr(clock, "advance"):
@@ -140,21 +162,69 @@ class ServingFrontend:
         self.clock = clock
         self.charge_service = charge_service
         self.service_timer = service_timer
+        self.tracer = tracer
+        self.metrics = metrics
+        self.name = name if name is not None else f"fe{next(_FE_NAMES)}"
+        self._lbl = {"frontend": self.name}
         # flush sizes land on compiled steps: round the size trigger up into
         # the engine's pow2 jit-cache buckets (engine.py:_batch_bucket)
         self.max_batch = int(engine._batch_bucket(self.cfg.max_batch))
         self._groups: dict[tuple, list[PendingSearch]] = {}
         self._seq = 0
-        self._n_submitted = 0
-        self._n_served = 0
-        self._n_shed = 0
-        self._n_batches = 0
-        self._rows_served = 0
-        self._rows_batched = 0
-        self._lat_ms: collections.deque = collections.deque(
-            maxlen=self.cfg.latency_window)
         self._t_first: Optional[float] = None
         self._t_last_done: Optional[float] = None
+
+    def _tr(self):
+        return self.tracer if self.tracer is not None else self.engine._tracer()
+
+    def _m(self) -> obs_metrics.MetricsRegistry:
+        return (self.metrics if self.metrics is not None
+                else self.engine._registry())
+
+    # registry instruments (get-or-create is idempotent and cheap)
+    def _c_submitted(self):
+        return self._m().counter("lira_frontend_submitted_total",
+                                 "requests accepted into the front-end")
+
+    def _c_served(self):
+        return self._m().counter("lira_frontend_served_total",
+                                 "requests answered (excludes shed)")
+
+    def _c_shed(self):
+        return self._m().counter("lira_frontend_shed_total",
+                                 "requests dropped, by reason: doa (deadline "
+                                 "blown before enqueue), displaced (evicted "
+                                 "by higher priority), rejected (full queue, "
+                                 "nothing outranked)")
+
+    def _c_batches(self):
+        return self._m().counter("lira_frontend_batches_total",
+                                 "engine serve calls issued")
+
+    def _c_rows(self):
+        return self._m().counter("lira_frontend_rows_total",
+                                 "query rows served through batches")
+
+    def _h_latency(self):
+        return self._m().histogram("lira_frontend_latency_ms",
+                                   "end-to-end request latency (injected "
+                                   "clock)")
+
+    def _h_queue(self):
+        return self._m().histogram("lira_frontend_queue_ms",
+                                   "enqueue → batch-launch wait")
+
+    def _h_batch_rows(self):
+        return self._m().histogram(
+            "lira_frontend_batch_rows",
+            "coalesced rows per serve call, per compatibility group",
+            buckets=obs_metrics.BATCH_ROWS_BUCKETS)
+
+    def _h_stage(self):
+        return self._m().histogram("lira_frontend_stage_ms",
+                                   "per-stage serve latency (traced runs "
+                                   "only), labeled stage=assemble/serve.*/"
+                                   "scatter")
 
     # ------------------------------------------------------------- intake
 
@@ -212,7 +282,7 @@ class ServingFrontend:
                                 rows=len(self._rows(request)), seq=self._seq,
                                 t_enq=t_enq, flush_by=t_enq + wait_s,
                                 expire_at=expire_at)
-        self._n_submitted += 1
+        self._c_submitted().inc(**self._lbl)
         if self._t_first is None:
             self._t_first = t_enq
         if not request.allow_batching:
@@ -220,7 +290,7 @@ class ServingFrontend:
             self._serve_batch(key, [pending])
             return pending
         if pending.expire_at is not None and pending.expire_at < now:
-            self._shed(pending)             # dead on arrival: SLO already blown
+            self._shed(pending, "doa")      # dead on arrival: SLO already blown
             return pending
         if self.depth() >= self.cfg.max_queue and not self._admit(pending):
             return pending
@@ -236,15 +306,18 @@ class ServingFrontend:
         victim = min((p for g in self._groups.values() for p in g),
                      key=lambda p: (p.request.priority, -p.seq), default=None)
         if victim is not None and victim.request.priority < pending.request.priority:
-            self._groups[victim.key].remove(victim)
-            if not self._groups[victim.key]:
+            # remove by identity: dataclass == on PendingSearch would compare
+            # the numpy query arrays inside the requests (ambiguous truth)
+            group = self._groups[victim.key]
+            group[:] = [p for p in group if p is not victim]
+            if not group:
                 del self._groups[victim.key]
-            self._shed(victim)
+            self._shed(victim, "displaced")
             return True
-        self._shed(pending)
+        self._shed(pending, "rejected")
         return False
 
-    def _shed(self, pending: PendingSearch) -> None:
+    def _shed(self, pending: PendingSearch, reason: str) -> None:
         k, sigma, tier, impl = pending.key
         pending._result = api.SearchResult(
             dists=np.full((pending.rows, k), np.inf, np.float32),
@@ -253,7 +326,7 @@ class ServingFrontend:
             stats=api.SearchStats(tier=tier, impl=impl, k=k, sigma=sigma,
                                   bucket=0, cache_hit=False, queue_ms=0.0,
                                   batch_size=0, shed=True))
-        self._n_shed += 1
+        self._c_shed().inc(reason=reason, **self._lbl)
 
     # ---------------------------------------------------------- scheduling
 
@@ -299,48 +372,84 @@ class ServingFrontend:
 
     def _serve_batch(self, key: tuple, batch: list[PendingSearch]) -> None:
         k, sigma, tier, impl = key
+        tr = self._tr()
         t_launch = self.clock()
-        queries = np.concatenate([self._rows(p.request) for p in batch], 0)
-        t0 = self.service_timer()
-        res = self.engine.search(api.SearchRequest(
-            queries=queries, k=k, sigma=sigma, tier=tier, impl=impl))
-        if self.charge_service:
-            self.clock.advance(self.service_timer() - t0)
-        t_done = self.clock()
-        row = 0
-        for pending in batch:
-            sl = slice(row, row + pending.rows)
-            row += pending.rows
-            pending._result = api.SearchResult(
-                dists=res.dists[sl], ids=res.ids[sl],
-                nprobe_eff=res.nprobe_eff[sl], overflow=res.overflow,
-                stats=api.SearchStats(
-                    tier=tier, impl=impl, k=k, sigma=sigma,
-                    bucket=res.stats.bucket, cache_hit=res.stats.cache_hit,
-                    queue_ms=(t_launch - pending.t_enq) * 1e3,
-                    batch_size=len(queries), shed=False))
-            self._lat_ms.append((t_done - pending.t_enq) * 1e3)
-        self._n_served += len(batch)
-        self._rows_served += len(queries)
-        self._n_batches += 1
-        self._rows_batched += len(queries)
+        with tr.span("frontend.batch", group=str(key),
+                     requests=len(batch)) as sp_batch:
+            with tr.span("frontend.assemble") as sp_asm:
+                queries = np.concatenate(
+                    [self._rows(p.request) for p in batch], 0)
+            t0 = self.service_timer()
+            # engine.search opens its own engine.* spans, which nest under
+            # frontend.batch when engine and front-end share a tracer
+            res = self.engine.search(api.SearchRequest(
+                queries=queries, k=k, sigma=sigma, tier=tier, impl=impl))
+            if self.charge_service:
+                self.clock.advance(self.service_timer() - t0)
+            t_done = self.clock()
+            with tr.span("frontend.scatter") as sp_scat:
+                row = 0
+                for pending in batch:
+                    sl = slice(row, row + pending.rows)
+                    row += pending.rows
+                    queue_ms = (t_launch - pending.t_enq) * 1e3
+                    latency_ms = (t_done - pending.t_enq) * 1e3
+                    stages = None
+                    if tr.enabled:
+                        # per-request breakdown: queue wait is this request's
+                        # own; assemble + engine stages are the batch's (each
+                        # request in a batch experienced them once, together)
+                        stages = {"queue": queue_ms,
+                                  "assemble": sp_asm.duration_ms}
+                        for st, ms in (res.stats.stages or {}).items():
+                            stages[f"serve.{st}"] = ms
+                    pending._result = api.SearchResult(
+                        dists=res.dists[sl], ids=res.ids[sl],
+                        nprobe_eff=res.nprobe_eff[sl], overflow=res.overflow,
+                        stats=api.SearchStats(
+                            tier=tier, impl=impl, k=k, sigma=sigma,
+                            bucket=res.stats.bucket,
+                            cache_hit=res.stats.cache_hit,
+                            queue_ms=queue_ms, batch_size=len(queries),
+                            shed=False, dedup_hits=res.stats.dedup_hits,
+                            latency_ms=latency_ms, stages=stages))
+                    self._c_served().inc(**self._lbl)
+                    self._h_queue().observe(queue_ms, **self._lbl)
+                    self._h_latency().observe(latency_ms, **self._lbl)
+            sp_batch.set(rows=len(queries))
+        self._c_batches().inc(**self._lbl)
+        self._c_rows().inc(len(queries), **self._lbl)
+        self._h_batch_rows().observe(len(queries), group=str(key), **self._lbl)
+        if tr.enabled:
+            hs = self._h_stage()
+            hs.observe(sp_asm.duration_ms, stage="assemble", **self._lbl)
+            hs.observe(sp_scat.duration_ms, stage="scatter", **self._lbl)
+            for st, ms in (res.stats.stages or {}).items():
+                hs.observe(ms, stage=f"serve.{st}", **self._lbl)
         self._t_last_done = t_done
 
     # ------------------------------------------------------------ telemetry
 
     def stats(self) -> FrontendStats:
-        lat = np.asarray(self._lat_ms, np.float64)
+        lbl = self._lbl
+        served = int(self._c_served().value(**lbl))
+        batches = int(self._c_batches().value(**lbl))
+        rows = self._c_rows().value(**lbl)
+        lat = self._h_latency()
         span = ((self._t_last_done - self._t_first)
                 if self._t_first is not None and self._t_last_done is not None
                 else 0.0)
+        # a single completion has no observable span (and span can be 0 under
+        # a virtual clock): report 0.0 rather than divide noise by epsilon
+        qps = rows / span if span > 0 and served >= 2 else 0.0
         return FrontendStats(
-            submitted=self._n_submitted, served=self._n_served,
-            shed=self._n_shed, batches=self._n_batches, depth=self.depth(),
-            mean_batch=(self._rows_batched / self._n_batches
-                        if self._n_batches else 0.0),
-            p50_ms=float(np.quantile(lat, 0.50)) if lat.size else 0.0,
-            p99_ms=float(np.quantile(lat, 0.99)) if lat.size else 0.0,
-            qps=(self._rows_served / span) if span > 0 else 0.0)
+            submitted=int(self._c_submitted().value(**lbl)), served=served,
+            shed=int(self._c_shed().total(**lbl)), batches=batches,
+            depth=self.depth(),
+            mean_batch=rows / batches if batches else 0.0,
+            p50_ms=lat.quantile(0.50, **lbl),
+            p99_ms=lat.quantile(0.99, **lbl),
+            qps=qps)
 
 
 # ------------------------------------------------------------- simulation
