@@ -1,0 +1,117 @@
+"""Perf ratchet: fail CI when the kernel path's roofline fraction regresses.
+
+Compares fresh ``BENCH_scan_paths.json`` / ``BENCH_quantized_scan.json``
+payloads against the snapshots committed under ``benchmarks/results/``.
+Absolute times are machine noise (CI boxes differ run to run), so the gate is
+a RATIO OF RATIOS: for each tracked metric the kernel path's
+``ceiling_fracs.frac_of_hbm_bw`` is first normalized by the same payload's
+ref-path fraction (machine speed cancels — both rows ran on the same box,
+same process), and only then compared fresh-vs-committed. A normalized ratio
+below ``1 - max_regression`` of the committed one fails.
+
+    PYTHONPATH=src python -m benchmarks.perf_ratchet \
+        --fresh bench-json --committed benchmarks/results [--max-regression 0.2]
+
+Metrics tracked (kernel row / ref row, both from one payload):
+  * scan_paths:      tiers.<t>.interpret.frac_of_hbm_bw / tiers.<t>.ref...
+                     for t in {f32, quantized, residual}
+  * quantized_scan:  adc_interpret.frac_of_hbm_bw / adc.frac_of_hbm_bw
+                     (the scalar-prefetch kernel path vs the jnp default)
+
+A missing committed snapshot skips that metric with a warning (first run of
+a new suite must be able to land its own baseline); a missing FRESH payload
+is an error — the bench that was supposed to produce it broke.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _get(d: dict, path: str):
+    cur = d
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(path)
+        cur = cur[part]
+    return cur
+
+
+# (suite, metric name, kernel-row path, ref-row path)
+METRICS = [
+    ("scan_paths", f"scan_paths/{t}_hbm_frac",
+     f"tiers.{t}.interpret.frac_of_hbm_bw", f"tiers.{t}.ref.frac_of_hbm_bw")
+    for t in ("f32", "quantized", "residual")
+] + [
+    ("quantized_scan", "quantized_scan/adc_interpret_hbm_frac",
+     "adc_interpret.frac_of_hbm_bw", "adc.frac_of_hbm_bw"),
+]
+
+
+def _normalized(payload: dict, kernel_path: str, ref_path: str) -> float:
+    kernel = float(_get(payload, kernel_path))
+    ref = float(_get(payload, ref_path))
+    if ref <= 0:
+        raise ValueError(f"ref-path fraction {ref_path} is {ref}; cannot "
+                         "normalize")
+    return kernel / ref
+
+
+def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
+          max_regression: float) -> list[str]:
+    """Returns a list of failure messages (empty = ratchet holds)."""
+    failures: list[str] = []
+    for suite, name, kernel_path, ref_path in METRICS:
+        fresh_file = fresh_dir / f"BENCH_{suite}.json"
+        committed_file = committed_dir / f"BENCH_{suite}.json"
+        if not fresh_file.exists():
+            failures.append(f"{name}: fresh payload {fresh_file} missing — "
+                            "did the bench run?")
+            continue
+        fresh = json.loads(fresh_file.read_text())
+        if not committed_file.exists():
+            print(f"[ratchet] {name}: no committed snapshot "
+                  f"({committed_file}) — skipping (baseline run)")
+            continue
+        committed = json.loads(committed_file.read_text())
+        try:
+            r_fresh = _normalized(fresh, kernel_path, ref_path)
+            r_committed = _normalized(committed, kernel_path, ref_path)
+        except KeyError as e:
+            print(f"[ratchet] {name}: metric {e} absent (older schema) — "
+                  "skipping")
+            continue
+        floor = r_committed * (1.0 - max_regression)
+        verdict = "OK" if r_fresh >= floor else "REGRESSED"
+        print(f"[ratchet] {name}: fresh={r_fresh:.4f} committed="
+              f"{r_committed:.4f} floor={floor:.4f} {verdict}")
+        if r_fresh < floor:
+            failures.append(
+                f"{name}: kernel/ref HBM-bw ratio {r_fresh:.4f} fell more "
+                f"than {max_regression:.0%} below committed {r_committed:.4f}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True,
+                    help="directory with the just-produced BENCH_*.json")
+    ap.add_argument("--committed", default="benchmarks/results",
+                    help="directory with the committed snapshots")
+    ap.add_argument("--max-regression", type=float, default=0.2,
+                    help="tolerated fractional drop of the normalized ratio")
+    args = ap.parse_args(argv)
+    failures = check(pathlib.Path(args.fresh), pathlib.Path(args.committed),
+                     args.max_regression)
+    if failures:
+        for f in failures:
+            print(f"[ratchet] FAIL: {f}", file=sys.stderr)
+        return 1
+    print("[ratchet] all tracked kernel-path ratios within bounds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

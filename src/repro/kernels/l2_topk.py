@@ -182,3 +182,116 @@ def l2_topk_batched(
         ],
         interpret=interpret,
     )(q, cands, cand_ids)
+
+
+def _l2_topk_qbuf_kernel(qb_ref, q_hbm, vec_hbm, cid_ref, od_ref, oi_ref,
+                         q_s, vbuf, sem_q, sem_vec,
+                         *, k: int, tc: int, n_cblocks: int, n_slots: int):
+    """One bucket per grid step: scalar-prefetched query-row gather (the
+    dispatch-buffer rows land in SMEM ahead of the body, so `.at[qb_ref[b,s]]`
+    is a plain dynamic DMA index) followed by double-buffered candidate-block
+    streaming into the running top-k — same merge scheme as the grid-batched
+    kernel, same arithmetic order, so distances stay bit-identical."""
+    b = pl.program_id(0)
+
+    # phase 1: gather this bucket's S query rows from the compact plane
+    def gather(s, carry):
+        cp = pltpu.make_async_copy(q_hbm.at[qb_ref[b, s]], q_s.at[s], sem_q)
+        cp.start()
+        cp.wait()
+        return carry
+
+    jax.lax.fori_loop(0, n_slots, gather, 0)
+    q = q_s[...].astype(jnp.float32)            # [S, d]
+
+    # phase 2: stream candidate blocks through a 2-deep VMEM ring
+    def copy_block(j, slot):
+        return pltpu.make_async_copy(vec_hbm.at[b, pl.ds(j * tc, tc)],
+                                     vbuf.at[slot], sem_vec.at[slot])
+
+    copy_block(0, 0).start()
+
+    def body(j, carry):
+        run_d, run_i = carry
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < n_cblocks)
+        def _prefetch_next():
+            copy_block(j + 1, jax.lax.rem(j + 1, 2)).start()
+
+        copy_block(j, slot).wait()
+        c = vbuf[slot].astype(jnp.float32)      # [TC, d]
+        cid = cid_ref[0, pl.ds(j * tc, tc)]     # [TC] int32, -1 = padding
+        d2 = (
+            2.0 * jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+            - jnp.sum(q * q, axis=-1, keepdims=True)
+            - jnp.sum(c * c, axis=-1)[None, :]
+        )  # [S, TC] = -dist²
+        d2 = jnp.where(cid[None, :] < 0, NEG_BIG, d2)
+        merged_d = jnp.concatenate([run_d, d2], axis=1)
+        merged_i = jnp.concatenate(
+            [run_i, jnp.broadcast_to(cid[None, :], d2.shape)], axis=1)
+        top_d, pos = jax.lax.top_k(merged_d, k)
+        return top_d, jnp.take_along_axis(merged_i, pos, axis=1)
+
+    init = (jnp.full((n_slots, k), NEG_BIG, jnp.float32),
+            jnp.full((n_slots, k), -1, jnp.int32))
+    run_d, run_i = jax.lax.fori_loop(0, n_cblocks, body, init)
+    invalid = run_d <= NEG_BIG / 2
+    od_ref[0] = jnp.where(invalid, jnp.inf, -run_d)
+    oi_ref[0] = jnp.where(invalid, -1, run_i)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tc", "interpret"))
+def l2_topk_qbuf(
+    q_pad: jax.Array,     # [q_row+1, d] compact queries + sentinel row
+    qbuf: jax.Array,      # [B, S] int32 query row per dispatch slot
+    cands: jax.Array,     # [B, C, d] — C multiple of tc
+    cand_ids: jax.Array,  # [B, C] int32, -1 = padding
+    k: int,
+    *,
+    tc: int = 256,
+    interpret: bool = True,
+):
+    """Dispatch-buffer form of ``l2_topk_batched``: takes the compact
+    ``q_pad`` plane plus ``qbuf`` indices instead of a host-expanded
+    ``[B, S, d]`` query stack, so the staged operand footprint is
+    O(q_row·d) + O(B·S) indices rather than O(B·S·d). Rows for empty slots
+    (``qbuf == q_row``) compute against the sentinel query; callers mask
+    them out downstream exactly as with the expanded form."""
+    bn, n_slots = qbuf.shape
+    cn, d = cands.shape[1], cands.shape[2]
+    assert cn % tc == 0, (cn, tc)
+    n_cblocks = cn // tc
+    kernel = functools.partial(_l2_topk_qbuf_kernel, k=k, tc=tc,
+                               n_cblocks=n_cblocks, n_slots=n_slots)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bn,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),         # q_pad stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),         # cands stay in HBM
+            pl.BlockSpec((1, cn), lambda b, qb: (b, 0)),  # cand_ids
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_slots, k), lambda b, qb: (b, 0, 0)),
+            pl.BlockSpec((1, n_slots, k), lambda b, qb: (b, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_slots, d), q_pad.dtype),
+            pltpu.VMEM((2, tc, d), cands.dtype),
+            pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    od, oi = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bn, n_slots, k), jnp.float32),
+            jax.ShapeDtypeStruct((bn, n_slots, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qbuf, q_pad, cands, cand_ids)
+    return od, oi

@@ -21,6 +21,7 @@ from repro.kernels import pq_adc as _adc
 from repro.kernels import kmeans_assign as _km
 
 
+from repro.kernels import autotune as _autotune
 from repro.kernels._util import pad_dim as _pad_dim, pad_rows as _pad_rows
 
 
@@ -69,6 +70,60 @@ def l2_topk_batched(q, cands, cand_ids, k: int, *, impl: str | None = None,
     d, i = _l2.l2_topk_batched(qp, cp, ip, k, tq=tq_eff, tc=tc_eff,
                                interpret=interpret)
     return d[:, :qn], i[:, :qn]
+
+
+def l2_topk_qbuf(q_pad, qbuf, cands, cand_ids, k: int, *,
+                 impl: str | None = None, tc: int | None = None):
+    """Dispatch-buffer top-k scan: compact ``q_pad`` [q_row+1, d] + ``qbuf``
+    [B, S] indices vs [B, C, d] candidate sets → ([B, S, k], [B, S, k]).
+    Replaces the host-side ``q_pad[qbuf]`` expansion — the kernel gathers each
+    bucket's rows itself via scalar prefetch. ``tc=None`` consults the
+    measured-sweep autotune cache (keyed on the store shape C/d/k)."""
+    impl = impl or default_impl()
+    qbuf = qbuf.astype(jnp.int32)
+    if impl == "ref":
+        return _ref.l2_topk_qbuf_ref(q_pad, qbuf, cands, cand_ids, k)
+    interpret = impl == "interpret" or jax.default_backend() != "tpu"
+    cn, d = cands.shape[1], cands.shape[2]
+    if tc is None:
+        tc = _autotune.lookup(_autotune.l2_key(cn, d, k))
+    tc_eff = min(tc, max(8, cn))
+    cp = _pad_dim(cands, 1, tc_eff, 0.0)
+    ip = _pad_dim(cand_ids.astype(jnp.int32), 1, tc_eff, -1)
+    return _l2.l2_topk_qbuf(q_pad, qbuf, cp, ip, k, tc=tc_eff,
+                            interpret=interpret)
+
+
+def pq_adc_topk_qbuf(lut_pad, qbuf, codes, cand_ids, k: int, *, cand_off=None,
+                     q_off=None, impl: str | None = None, tn: int | None = None):
+    """Dispatch-buffer fused ADC shortlist: compact ``lut_pad`` [q_row+1, m, ks]
+    + ``qbuf`` [B, S] indices vs [B, N, m] code sets → ([B, S, k], [B, S, k]),
+    threading the residual ``cand_off`` [B, N] / ``q_off`` [B, S] offsets.
+    Replaces the host-side ``lut_pad[qbuf]`` expansion (the O(B·S·m·ks)
+    amplification); the kernel gathers each bucket's LUT rows via scalar
+    prefetch. ``tn=None`` consults the autotune cache (store shape N/m/ks/k)."""
+    impl = impl or default_impl()
+    qbuf = qbuf.astype(jnp.int32)
+    if impl == "ref":
+        return _ref.pq_adc_topk_qbuf_ref(lut_pad, qbuf, codes, cand_ids, k,
+                                         cand_off=cand_off, q_off=q_off)
+    interpret = impl == "interpret" or jax.default_backend() != "tpu"
+    bn, n_slots = qbuf.shape
+    nn, m = codes.shape[1], codes.shape[2]
+    ks = lut_pad.shape[2]
+    if tn is None:
+        tn = _autotune.lookup(_autotune.pq_adc_key(nn, m, ks, k))
+    tn_eff = min(tn, max(8, nn))
+    cp = _pad_dim(codes.astype(jnp.int32), 1, tn_eff, 0)
+    ip = _pad_dim(cand_ids.astype(jnp.int32), 1, tn_eff, -1)
+    if cand_off is None:
+        cand_off = jnp.zeros((bn, nn), jnp.float32)
+    if q_off is None:
+        q_off = jnp.zeros((bn, n_slots), jnp.float32)
+    cop = _pad_dim(cand_off.astype(jnp.float32), 1, tn_eff, 0.0)
+    return _adc.pq_adc_topk_qbuf(lut_pad, qbuf, cp, ip, k, cand_off=cop,
+                                 q_off=q_off.astype(jnp.float32), tn=tn_eff,
+                                 interpret=interpret)
 
 
 def pq_adc_topk_batched(lut, codes, cand_ids, k: int, *, cand_off=None,

@@ -6,11 +6,19 @@ one-hot contraction on the MXU (ks ≤ 256 keeps the one-hot tile cheap and
 turns random access into a dense dot — the standard TPU adaptation of the
 Faiss LUT scan; see DESIGN.md §3).
 
-Two entry points:
+Three entry points:
   * ``pq_adc``       — full [Q, N] ADC distance matrix;
   * ``pq_adc_topk``  — fused LUT-scan + running top-k shortlist (the quantized
     serving tier's stage 1): the [Q, N] distance tile never round-trips to
-    HBM, only the [Q, k] shortlist survives — same scratch scheme as l2_topk.
+    HBM, only the [Q, k] shortlist survives — same scratch scheme as l2_topk;
+  * ``pq_adc_topk_qbuf`` — the batched serve-step form that takes the COMPACT
+    ``lut_pad [q_row+1, m, ks]`` plane plus the ``qbuf [b_loc, q_cap]``
+    dispatch buffer instead of a pre-expanded ``[b_loc, q_cap, m, ks]`` LUT
+    stack. ``qbuf`` rides as a scalar-prefetch operand
+    (``pltpu.PrefetchScalarGridSpec``), so each bucket's grid step DMAs only
+    its own slots' LUT rows from HBM into VMEM — the host never materializes
+    the ≈nprobe·q_cap_factor× amplified operand the old path staged — and the
+    codes stream through a double-buffered in-kernel pipeline.
 
 Tiling: grid = (Q_tiles, N_blocks); LUT tile [TQ, m·ks] stays in VMEM across
 the candidate scan, codes stream in as [TN, m] int blocks.
@@ -279,3 +287,135 @@ def pq_adc_topk_batched(
         interpret=interpret,
     )(lp, cp, ip, cop, qop)
     return od[:, :qn], oi[:, :qn]
+
+
+def _pq_adc_topk_qbuf_kernel(qb_ref, lut_hbm, codes_hbm, cid_ref, coff_ref,
+                             qoff_ref, od_ref, oi_ref, lut_s, cbuf,
+                             sem_lut, sem_codes,
+                             *, k: int, ks: int, tn: int, n_nblocks: int,
+                             n_slots: int):
+    """One bucket per grid step. Two-phase body:
+
+    1. scalar-prefetched LUT gather — ``qb_ref`` (SMEM) names each dispatch
+       slot's query row; the rows are DMA'd one by one from the compact
+       ``lut_pad`` plane in HBM into the ``lut_s`` VMEM scratch. Empty slots
+       (``q_row``) fetch the zero sentinel row.
+    2. double-buffered candidate streaming — code blocks of ``tn`` slots are
+       DMA'd into the 2-deep ``cbuf`` ring; block j+1's copy is in flight
+       while block j feeds the one-hot MXU contraction and the running
+       top-k merge (carried through the fori_loop, no cross-step scratch).
+    """
+    b = pl.program_id(0)
+
+    def gather(s, carry):
+        cp = pltpu.make_async_copy(lut_hbm.at[qb_ref[b, s]], lut_s.at[s],
+                                   sem_lut)
+        cp.start()
+        cp.wait()
+        return carry
+
+    jax.lax.fori_loop(0, n_slots, gather, 0)
+    lut = lut_s[...].reshape(n_slots, -1)       # [S, m·ks] f32
+    qoff = qoff_ref[0]                          # [S] f32
+
+    def copy_block(j, slot):
+        return pltpu.make_async_copy(codes_hbm.at[b, pl.ds(j * tn, tn)],
+                                     cbuf.at[slot], sem_codes.at[slot])
+
+    copy_block(0, 0).start()
+
+    def body(j, carry):
+        run_d, run_i = carry
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < n_nblocks)
+        def _prefetch_next():
+            copy_block(j + 1, jax.lax.rem(j + 1, 2)).start()
+
+        copy_block(j, slot).wait()
+        codes = cbuf[slot]                      # [tn, m] int32
+        cid = cid_ref[0, pl.ds(j * tn, tn)]     # [tn] int32, -1 = padding
+        coff = coff_ref[0, pl.ds(j * tn, tn)]   # [tn] f32
+        onehot = jax.nn.one_hot(codes, ks, dtype=lut_s.dtype)
+        d = jax.lax.dot_general(
+            lut, onehot.reshape(onehot.shape[0], -1),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [S, tn]
+        d = d + qoff[:, None] + coff[None, :]
+        negd = jnp.where(cid[None, :] < 0, NEG_BIG, -d)
+        merged_d = jnp.concatenate([run_d, negd], axis=1)
+        merged_i = jnp.concatenate(
+            [run_i, jnp.broadcast_to(cid[None, :], negd.shape)], axis=1)
+        top_d, pos = jax.lax.top_k(merged_d, k)
+        return top_d, jnp.take_along_axis(merged_i, pos, axis=1)
+
+    init = (jnp.full((n_slots, k), NEG_BIG, jnp.float32),
+            jnp.full((n_slots, k), -1, jnp.int32))
+    run_d, run_i = jax.lax.fori_loop(0, n_nblocks, body, init)
+    invalid = run_d <= NEG_BIG / 2
+    od_ref[0] = jnp.where(invalid, jnp.inf, -run_d)
+    oi_ref[0] = jnp.where(invalid, -1, run_i)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tn", "interpret"))
+def pq_adc_topk_qbuf(
+    lut_pad: jax.Array,   # [q_row+1, m, ks] compact LUTs + zero sentinel row
+    qbuf: jax.Array,      # [B, S] int32 query row per dispatch slot
+    codes: jax.Array,     # [B, N, m] int32 PQ codes (N multiple of tn)
+    cand_ids: jax.Array,  # [B, N] int32, -1 = padding
+    k: int,
+    *,
+    cand_off: jax.Array,  # [B, N] f32 residual cterm plane (zeros when unused)
+    q_off: jax.Array,     # [B, S] f32 per-slot residual offset (zeros when unused)
+    tn: int = 128,
+    interpret: bool | None = None,
+):
+    """Scalar-prefetch-gathered, streaming form of ``pq_adc_topk_batched``.
+
+    Staged operand footprint is O(q_row·m·ks) + O(B·S) indices — independent
+    of dispatch fan-out — instead of the O(B·S·m·ks) HBM stack the dense
+    batched kernel needs its caller to gather. Rows for empty slots
+    (``qbuf == q_row``) hold garbage; callers drop them, exactly like the
+    serve step's scatter. VMEM holds one bucket's gathered LUT rows
+    (S·m·ks·4 bytes) — S is the dispatch q_cap, small by construction.
+    """
+    bn, n_slots = qbuf.shape
+    _, m, ks = lut_pad.shape
+    n = codes.shape[1]
+    assert n % tn == 0, (n, tn)
+    interpret = _detect_interpret(interpret)
+    n_nblocks = n // tn
+    kernel = functools.partial(_pq_adc_topk_qbuf_kernel, k=k, ks=ks, tn=tn,
+                               n_nblocks=n_nblocks, n_slots=n_slots)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bn,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),            # lut_pad (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),            # codes (HBM)
+            pl.BlockSpec((1, n), lambda b, qb: (b, 0)),      # cand_ids
+            pl.BlockSpec((1, n), lambda b, qb: (b, 0)),      # cand_off
+            pl.BlockSpec((1, n_slots), lambda b, qb: (b, 0)),  # q_off
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_slots, k), lambda b, qb: (b, 0, 0)),
+            pl.BlockSpec((1, n_slots, k), lambda b, qb: (b, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_slots, m, ks), jnp.float32),  # gathered LUT rows
+            pltpu.VMEM((2, tn, m), jnp.int32),          # code stream ring
+            pltpu.SemaphoreType.DMA(()),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    od, oi = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bn, n_slots, k), jnp.float32),
+            jax.ShapeDtypeStruct((bn, n_slots, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qbuf, lut_pad, codes, cand_ids, cand_off, q_off)
+    return od, oi

@@ -79,6 +79,24 @@ def pq_adc_topk_batched_ref(lut: jax.Array, codes: jax.Array, cand_ids: jax.Arra
     )(lut, codes, cand_ids, cand_off, q_off)
 
 
+def l2_topk_qbuf_ref(q_pad: jax.Array, qbuf: jax.Array, cands: jax.Array,
+                     cand_ids: jax.Array, k: int):
+    """Oracle for the scalar-prefetch entry point: materializes the dense
+    ``[B,S,d]`` gather the kernel avoids, then defers to the batched oracle —
+    the old host-side-expansion semantics, kept as the parity reference."""
+    return l2_topk_batched_ref(q_pad[qbuf], cands, cand_ids, k)
+
+
+def pq_adc_topk_qbuf_ref(lut_pad: jax.Array, qbuf: jax.Array, codes: jax.Array,
+                         cand_ids: jax.Array, k: int,
+                         cand_off: jax.Array | None = None,
+                         q_off: jax.Array | None = None):
+    """Oracle for the scalar-prefetch ADC entry point: dense ``lut_pad[qbuf]``
+    gather + batched oracle (old host-side-expansion semantics)."""
+    return pq_adc_topk_batched_ref(lut_pad[qbuf], codes, cand_ids, k,
+                                   cand_off=cand_off, q_off=q_off)
+
+
 def dedup_topk_ref(dists: jax.Array, ids: jax.Array, k: int):
     """Exact replica-aware merge of a candidate pool (jnp oracle).
 

@@ -586,7 +586,8 @@ class LiraEngine:
         m.counter("lira_engine_rows_total",
                   "query rows served (pre-padding)").inc(nq, **lbl)
         m.counter("lira_engine_probes_total",
-                  "effective partition probes dispatched").inc(
+                  "partition probes attempted (pre q_cap drops — includes "
+                  "any counted by overflow_probes_total)").inc(
                       float(npb_np.sum()), **lbl)
         m.counter("lira_engine_overflow_probes_total",
                   "probes dropped by q_cap bucket overflow").inc(
@@ -617,14 +618,16 @@ class LiraEngine:
         return result
 
     def overflow_rate(self) -> float:
-        """Cumulative q_cap overflow rate: dropped probes / attempted probes
-        (attempted = dispatched + dropped), across every tier/impl this
-        engine's registry has seen. 0.0 until any search ran."""
+        """Cumulative q_cap overflow rate: dropped probes / attempted probes,
+        across every tier/impl this engine's registry has seen. 0.0 until any
+        search ran. ``lira_engine_probes_total`` counts ATTEMPTED probes —
+        ``nprobe_eff`` is summed from ``probe_ok`` before q_cap drops — so it
+        is the denominator by itself; adding ``dropped`` to it would count
+        every dropped probe twice and under-report the rate."""
         m = self._registry()
         dropped = m.counter("lira_engine_overflow_probes_total").total()
-        dispatched = m.counter("lira_engine_probes_total").total()
-        denom = dropped + dispatched
-        return dropped / denom if denom > 0 else 0.0
+        attempted = m.counter("lira_engine_probes_total").total()
+        return dropped / attempted if attempted > 0 else 0.0
 
     # ------------------------------------------------------------ front-end
 

@@ -285,12 +285,15 @@ class ServingFrontend:
         self._c_submitted().inc(**self._lbl)
         if self._t_first is None:
             self._t_first = t_enq
+        if pending.expire_at is not None and pending.expire_at < now:
+            # dead on arrival: SLO already blown. Checked BEFORE the bypass
+            # branch — an allow_batching=False request with an expired
+            # explicit deadline sheds exactly like the queued path would.
+            self._shed(pending, "doa")
+            return pending
         if not request.allow_batching:
             # bypass the queue entirely: a solo batch, served now
             self._serve_batch(key, [pending])
-            return pending
-        if pending.expire_at is not None and pending.expire_at < now:
-            self._shed(pending, "doa")      # dead on arrival: SLO already blown
             return pending
         if self.depth() >= self.cfg.max_queue and not self._admit(pending):
             return pending

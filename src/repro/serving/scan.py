@@ -11,9 +11,15 @@ interchangeable implementations:
                     parity oracle for the kernels);
   * ``pallas``    — the fused Pallas kernels, grid-batched over the whole
                     ``[b_loc, q_cap]`` dispatch buffer in one launch
-                    (``kernels.l2_topk_batched`` for the f32 tier,
-                    ``kernels.pq_adc_topk_batched`` for the quantized tiers,
+                    (``kernels.l2_topk_qbuf`` for the f32 tier,
+                    ``kernels.pq_adc_topk_qbuf`` for the quantized tiers,
                     threading the residual ``cand_off``/``q_off`` operands).
+                    The compact ``q_pad`` / ``lut_pad`` planes and the
+                    ``qbuf`` index buffer go straight into the kernels as
+                    scalar-prefetch operands — the host never expands them to
+                    one copy per occupied dispatch slot, so stage-1 staging is
+                    O(q_row·row) + O(b_loc·q_cap) indices instead of
+                    O(b_loc·q_cap·row) (see ``staged_operand_bytes``).
                     Compiles natively on TPU, interprets elsewhere;
   * ``interpret`` — the kernels forced through the Pallas interpreter on any
                     backend (what CI's parity suite and bench smoke run).
@@ -100,8 +106,11 @@ def _f32_ref(qbuf, q_pad, vecs_loc, ids_loc, k):
 
 
 def _f32_kernel(qbuf, q_pad, vecs_loc, ids_loc, k, impl):
-    qg = q_pad[qbuf].astype(vecs_loc.dtype)                  # [b_loc, q_cap, d]
-    return kops.l2_topk_batched(qg, vecs_loc, ids_loc, k, impl=impl)
+    # cast the COMPACT plane to the store dtype (same quantization point as
+    # the ref path's per-slot cast); the kernel gathers each bucket's rows
+    # itself via the scalar-prefetched qbuf — no [b_loc, q_cap, d] expansion
+    qp = q_pad.astype(vecs_loc.dtype)                        # [q_row + 1, d]
+    return kops.l2_topk_qbuf(qp, qbuf, vecs_loc, ids_loc, k, impl=impl)
 
 
 # ------------------------------------------------------------ quantized tiers
@@ -151,20 +160,18 @@ def _quantized_kernel(qbuf, q_pad, vecs_loc, ids_loc, k, lut_pad, codes_loc, rk,
     cap = vecs_loc.shape[1]
     # stage 1: one fused launch over all buckets. The kernel ranks by ADC and
     # returns the ids it was given — feed it SLOT indices so the shortlist can
-    # gather the f32 rerank operands (invalid slots come back as -1).
-    # NOTE: this gather materializes one LUT copy per occupied bucket slot
-    # (~nprobe·q_cap_factor× the per-query LUT footprint) before the launch;
-    # at pod scale the kernel should gather per q-tile from lut_pad via
-    # scalar-prefetched qbuf instead — ROADMAP follow-up.
-    lq = lut_pad[qbuf]                                       # [b_loc, q_cap, m, ks]
+    # gather the f32 rerank operands (invalid slots come back as -1). The
+    # compact lut_pad plane + qbuf go in directly; the kernel's scalar-
+    # prefetch gather replaces the old host-side lut_pad[qbuf] expansion
+    # (one LUT copy per occupied slot, ≈nprobe·q_cap_factor× amplification).
     slots = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32)[None, :], (b_loc, cap))
     slots = jnp.where(ids_loc < 0, -1, slots)
     coff = qoff = None
     if cterm_loc is not None:
         coff = cterm_loc                                     # [b_loc, cap]
         qoff = jnp.take_along_axis(off_loc, qbuf, axis=1)    # [b_loc, q_cap]
-    _, sl = kops.pq_adc_topk_batched(lq, codes_loc, slots, rk,
-                                     cand_off=coff, q_off=qoff, impl=impl)
+    _, sl = kops.pq_adc_topk_qbuf(lut_pad, qbuf, codes_loc, slots, rk,
+                                  cand_off=coff, q_off=qoff, impl=impl)
     # stage 2: exact f32 rerank of the shortlist (same math as the ref path)
     safe = jnp.maximum(sl, 0)                                # [b_loc, q_cap, rk]
     cid = jnp.where(sl >= 0,
@@ -180,3 +187,34 @@ def _quantized_kernel(qbuf, q_pad, vecs_loc, ids_loc, k, lut_pad, codes_loc, rk,
     d2 = jnp.where(cid < 0, jnp.inf, d2)
     neg, posk = jax.lax.top_k(-d2, k)
     return -neg, jnp.take_along_axis(cid, posk, axis=-1)
+
+
+# ----------------------------------------------------------- bytes accounting
+
+def staged_operand_bytes(qbuf, plane) -> dict:
+    """Stage-1 per-query operand staging footprint for a dispatch shape.
+
+    ``plane`` is the compact per-query operand the kernel path stages —
+    ``q_pad [q_row+1, d]`` for the f32 tier, ``lut_pad [q_row+1, m, ks]`` for
+    the quantized tiers. Returns:
+
+      compact_bytes  — what the qbuf entry points stage: the plane itself
+                       plus the int32 ``qbuf`` index buffer
+                       (O(q_row·row) + O(b_loc·q_cap));
+      expanded_bytes — what the retired host-side ``plane[qbuf]`` gather
+                       materialized: one plane row per dispatch slot
+                       (O(b_loc·q_cap·row)).
+
+    The ratio is the input amplification the scalar-prefetch rewrite removed;
+    benches persist both so the improvement is auditable. Accepts arrays or
+    ``jax.ShapeDtypeStruct``s (only ``.shape``/``.dtype`` are read).
+    """
+    b_loc, q_cap = qbuf.shape
+    row_elems = 1
+    for s in plane.shape[1:]:
+        row_elems *= int(s)
+    row_bytes = row_elems * jnp.dtype(plane.dtype).itemsize
+    return {
+        "compact_bytes": int(plane.shape[0]) * row_bytes + b_loc * q_cap * 4,
+        "expanded_bytes": b_loc * q_cap * row_bytes,
+    }

@@ -209,6 +209,8 @@ class PqTier(Tier):
         # codebooks make it exact; residual codebooks are exact up to the two
         # scalar corrections of the residual ADC identity (core/pq.py) added
         # by ResidualPqTier below. The zero row pairs with q_pad's sentinel.
+        # This COMPACT [q_row+1, m, ks] plane is what the scan kernels consume
+        # (scalar-prefetched per-bucket gather) — never expand it per slot.
         lut_pad = jnp.concatenate(
             [quantized_tier.adc_lut(codebooks, ctx.q_loc),
              jnp.zeros((1, m, codebooks.shape[1]), jnp.float32)], 0)

@@ -128,6 +128,27 @@ def test_allow_batching_false_bypasses_queue(tiny_engine):
     assert fe.depth() == 1
 
 
+def test_bypass_request_with_expired_deadline_is_shed(tiny_engine):
+    """allow_batching=False must not skip the dead-on-arrival check: a bypass
+    request whose explicit deadline_ms already passed sheds with reason doa,
+    exactly like the queued path — serving provably-late traffic burns drain
+    capacity either way."""
+    eng, q = tiny_engine
+    fe, clock = _frontend(eng)
+    clock.advance(1.0)
+    doa = fe.submit(SearchRequest(queries=q[0], deadline_ms=1.0,
+                                  allow_batching=False), t_arrival=0.0)
+    assert doa.done()
+    res = doa.result()
+    assert res.stats.shed and res.stats.batch_size == 0
+    # a live deadline still bypasses straight to a solo batch
+    live = fe.submit(SearchRequest(queries=q[1], deadline_ms=1e4,
+                                   allow_batching=False))
+    assert live.done() and not live.result().stats.shed
+    assert live.result().stats.batch_size == 1
+    assert fe.depth() == 0
+
+
 # ---------------------------------------------------------- bucket rounding
 
 def test_size_trigger_rounds_into_jit_buckets(tiny_engine):

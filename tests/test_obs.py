@@ -346,6 +346,30 @@ def test_engine_metrics_and_stage_sum(obs_engines):
         assert sum(r.stats.stages.values()) >= 0.5 * r.stats.latency_ms
 
 
+def test_overflow_rate_counts_dropped_probes_once(obs_engines):
+    """Bugfix regression: ``lira_engine_probes_total`` counts ATTEMPTED
+    probes (nprobe_eff sums probe_ok before q_cap drops), so the rate is
+    dropped/attempted — the old ``dropped + dispatched`` denominator counted
+    every dropped probe twice and under-reported the rate."""
+    engines, q = obs_engines
+    src = engines["f32"]
+    reg = MetricsRegistry()
+    # q_cap sized far below the σ=-1 fan-out → forced overflow
+    eng = LiraEngine(cfg=dataclasses.replace(src.cfg, q_cap_factor=0.25),
+                     params=src.params, store=src.store, mesh=src.mesh,
+                     sigma=-1.0, metrics=reg)
+    res = eng.search(SearchRequest(queries=q))
+    dropped = reg.counter("lira_engine_overflow_probes_total").total()
+    attempted = reg.counter("lira_engine_probes_total").total()
+    assert dropped == res.overflow > 0
+    # σ=-1 probes every partition for every row — all attempts are counted,
+    # including the ones q_cap later dropped
+    assert attempted == len(q) * src.cfg.n_partitions
+    assert eng.overflow_rate() == pytest.approx(dropped / attempted)
+    # the buggy denominator under-reported exactly like this:
+    assert eng.overflow_rate() > dropped / (dropped + attempted)
+
+
 def test_q_cap_bump_is_observable(obs_engines):
     engines, _ = obs_engines
     src = engines["f32"]
