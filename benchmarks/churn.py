@@ -1,0 +1,156 @@
+"""Sustained-churn gate for the mutable index (ISSUE 9).
+
+Streams deletes + inserts through a live ``LiraEngine`` — ≥20% of the base
+churned in interleaved rounds with ``maybe_repartition`` checked after each —
+then compares recall@k against an index FRESHLY rebuilt over the surviving
+logical set at equal fixed fanout (σ=-1 probes every partition on both
+sides, so the comparison isolates store quality from probe selection).
+
+The CI gates (raising fails the suite, and run.py exits nonzero):
+  * churned recall within ε=0.02 of the fresh rebuild, per tier
+    ({f32, pq, residual_pq});
+  * same-shape mutations cause ZERO serve-step recompiles (the jit-cache
+    miss counter must not move across the post-churn searches);
+  * compaction reclaims every tombstone and survivors' results are
+    preserved (ids identical before/after compact at fixed fanout).
+
+Emits the usual CSV rows AND returns a JSON payload that ``benchmarks/run.py
+--json-out`` persists as ``BENCH_churn.json``: per-tier churned/fresh recall,
+mutation throughput (insert/delete rows per wall second), repartition moves,
+compaction reclaim, and epoch/recompile counts — the perf trajectory for the
+mutation path starts here.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ground_truth as gt
+from repro.core.metrics import recall_at_k
+from repro.data import make_vector_dataset
+from repro.launch.mesh import make_test_mesh
+from repro.obs import MetricsRegistry
+from repro.serving import BuildConfig, LiraEngine
+
+N, NQ, DIM, B, K = 2_000, 32, 16, 8, 10
+ETA, TRAIN_FRAC, EPOCHS, SEED = 0.03, 0.4, 2, 17
+PQ_M, PQ_KS = 4, 32
+TIERS = ("f32", "pq", "residual_pq")
+N_DELETE, N_INSERT, ROUNDS = 300, 250, 5
+EPS = 0.02                     # tolerated recall gap vs the fresh rebuild
+NEW_ID_BASE = 10_000
+
+
+def _build(x, tier):
+    return LiraEngine.build(make_test_mesh(), x, BuildConfig(
+        n_partitions=B, k=K, eta=ETA, train_frac=TRAIN_FRAC, epochs=EPOCHS,
+        nprobe_max=B, tier=tier, pq_m=PQ_M, pq_ks=PQ_KS))
+
+
+def _churn_one(tier: str, ds, host) -> dict:
+    eng = _build(ds.base, tier)
+    eng.metrics = reg = MetricsRegistry()
+
+    doomed = host.choice(N, N_DELETE, replace=False)
+    new_x = (ds.base[host.choice(N, N_INSERT, replace=False)]
+             + host.normal(0, 0.05, (N_INSERT, DIM)).astype(np.float32))
+    new_ids = np.arange(N_INSERT, dtype=np.int32) + NEW_ID_BASE
+    churn_frac = (N_DELETE + N_INSERT) / N
+    assert churn_frac >= 0.20, "the bench must exercise ≥20% churn"
+
+    del_s = ins_s = 0.0
+    dpr, ipr = N_DELETE // ROUNDS, N_INSERT // ROUNDS
+    for i in range(ROUNDS):
+        t0 = time.perf_counter()
+        eng.delete(doomed[i * dpr:(i + 1) * dpr])
+        del_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        eng.insert(new_x[i * ipr:(i + 1) * ipr],
+                   new_ids[i * ipr:(i + 1) * ipr])
+        ins_s += time.perf_counter() - t0
+        eng.maybe_repartition()
+    eng.maybe_repartition(force=True)
+
+    keep = np.setdiff1d(np.arange(N), doomed)
+    all_x = np.concatenate([ds.base[keep], new_x], 0)
+    all_ids = np.concatenate([keep.astype(np.int32), new_ids], 0)
+    _, gti = gt.exact_knn(ds.queries, all_x, K)
+    gt_ids = all_ids[gti]
+
+    # the gate comparison: churned store vs fresh rebuild, full fanout
+    r_churn = eng.search(ds.queries, sigma=-1.0)
+    fresh = _build(all_x, tier)
+    r_fresh = fresh.search(ds.queries, sigma=-1.0)
+    rec_churn = recall_at_k(np.asarray(r_churn.ids), gt_ids, K)
+    rec_fresh = recall_at_k(all_ids[np.asarray(r_fresh.ids)], gt_ids, K)
+    assert not np.isin(doomed, r_churn.ids).any(), \
+        f"{tier}: deleted ids surfaced after churn"
+    assert rec_churn >= rec_fresh - EPS, (
+        f"{tier}: churned recall {rec_churn:.4f} fell more than {EPS} below "
+        f"fresh rebuild {rec_fresh:.4f}")
+
+    # same-shape zero-recompile gate: the serve step compiled above must
+    # keep serving across a same-shape delete+insert round-trip
+    misses_before = reg.counter("lira_engine_jit_cache_misses_total").total()
+    victim = all_ids[host.integers(0, len(all_ids))]
+    vrow = all_x[all_ids == victim][:1]
+    eng.delete([victim])
+    eng.insert(vrow, [victim])
+    r_again = eng.search(ds.queries, sigma=-1.0)
+    assert r_again.stats.cache_hit, "same-shape mutation caused a recompile"
+    misses_after = reg.counter("lira_engine_jit_cache_misses_total").total()
+    assert misses_after == misses_before, (
+        f"{tier}: same-shape mutations recompiled "
+        f"({misses_after - misses_before} misses)")
+
+    # compaction gate: reclaim erases tombstones, survivors keep their answer
+    cap_before = eng.cfg.capacity
+    reclaimed = eng.compact()
+    r_dense = eng.search(ds.queries, sigma=-1.0)
+    assert np.array_equal(np.asarray(r_again.ids), np.asarray(r_dense.ids)), \
+        f"{tier}: compaction changed results"
+
+    return {
+        "churn_frac": round(churn_frac, 4),
+        "recall_churned": round(rec_churn, 4),
+        "recall_fresh": round(rec_fresh, 4),
+        "recall_gap": round(rec_fresh - rec_churn, 4),
+        "insert_rows_per_s": round(N_INSERT / max(ins_s, 1e-9), 1),
+        "delete_rows_per_s": round(N_DELETE / max(del_s, 1e-9), 1),
+        "epochs": int(eng.epoch),
+        "repartitions": int(
+            reg.counter("lira_engine_repartitions_total").total()),
+        "repartition_moved_rows": int(
+            reg.counter("lira_engine_repartition_moved_rows_total").total()),
+        "capacity_grows": int(
+            reg.counter("lira_engine_capacity_grows_total").total()),
+        "compaction_reclaimed_slots": int(reclaimed),
+        "capacity_before_compact": int(cap_before),
+        "capacity_after_compact": int(eng.cfg.capacity),
+    }
+
+
+def run(emit):
+    ds = make_vector_dataset(n=N, n_queries=NQ, dim=DIM, n_modes=B,
+                             seed=SEED)
+    payload = {
+        "suite": "churn",
+        "config": {"n": N, "dim": DIM, "partitions": B, "k": K, "eta": ETA,
+                   "n_delete": N_DELETE, "n_insert": N_INSERT,
+                   "rounds": ROUNDS, "eps": EPS},
+        "tiers": {},
+    }
+    for tier in TIERS:
+        host = np.random.default_rng(23)    # identical churn stream per tier
+        t0 = time.perf_counter()
+        res = _churn_one(tier, ds, host)
+        res["wall_s"] = round(time.perf_counter() - t0, 2)
+        payload["tiers"][tier] = res
+        emit(f"churn/{tier}_recall_churned", res["recall_churned"] * 1e6,
+             f"fresh={res['recall_fresh']}")
+        emit(f"churn/{tier}_insert_rows_per_s", res["insert_rows_per_s"],
+             f"delete={res['delete_rows_per_s']}")
+        emit(f"churn/{tier}_reclaimed", res["compaction_reclaimed_slots"],
+             f"epochs={res['epochs']}")
+    return payload

@@ -1,22 +1,30 @@
-"""Perf ratchet: fail CI when the kernel path's roofline fraction regresses.
+"""Perf ratchet: fail CI when a tracked perf ratio regresses.
 
-Compares fresh ``BENCH_scan_paths.json`` / ``BENCH_quantized_scan.json``
-payloads against the snapshots committed under ``benchmarks/results/``.
-Absolute times are machine noise (CI boxes differ run to run), so the gate is
-a RATIO OF RATIOS: for each tracked metric the kernel path's
-``ceiling_fracs.frac_of_hbm_bw`` is first normalized by the same payload's
-ref-path fraction (machine speed cancels — both rows ran on the same box,
-same process), and only then compared fresh-vs-committed. A normalized ratio
-below ``1 - max_regression`` of the committed one fails.
+Compares fresh ``BENCH_*.json`` payloads against the snapshots committed
+under ``benchmarks/results/``. Absolute times are machine noise (CI boxes
+differ run to run), so every gate is a RATIO OF RATIOS: each tracked metric
+is first normalized WITHIN its own payload by a second measurement from the
+same box and process (machine speed cancels), and only then compared
+fresh-vs-committed against a ``max_regression`` band.
 
     PYTHONPATH=src python -m benchmarks.perf_ratchet \
         --fresh bench-json --committed benchmarks/results [--max-regression 0.2]
 
-Metrics tracked (kernel row / ref row, both from one payload):
-  * scan_paths:      tiers.<t>.interpret.frac_of_hbm_bw / tiers.<t>.ref...
-                     for t in {f32, quantized, residual}
-  * quantized_scan:  adc_interpret.frac_of_hbm_bw / adc.frac_of_hbm_bw
-                     (the scalar-prefetch kernel path vs the jnp default)
+Metrics tracked:
+  * scan_paths (higher is better):
+    tiers.<t>.interpret.frac_of_hbm_bw / tiers.<t>.ref.frac_of_hbm_bw
+    for t in {f32, quantized, residual} — the kernel path's roofline
+    fraction normalized by the jnp ref path;
+  * quantized_scan (higher is better):
+    adc_interpret.frac_of_hbm_bw / adc.frac_of_hbm_bw
+    (the scalar-prefetch kernel path vs the jnp default);
+  * serving (LOWER is better): near-saturation tail latency — the 0.8×
+    load point's p99_ms normalized by the same payload's measured
+    batch_service_ms, i.e. "p99 in units of one batch's serve time". Box
+    speed cancels (both numbers time the same engine on the same box);
+    what's left is queueing + scheduling overhead, which is exactly what
+    front-end/engine changes can regress. Fails when the fresh ratio rises
+    more than ``max_regression`` above the committed one.
 
 A missing committed snapshot skips that metric with a warning (first run of
 a new suite must be able to land its own baseline); a missing FRESH payload
@@ -39,31 +47,54 @@ def _get(d: dict, path: str):
     return cur
 
 
-# (suite, metric name, kernel-row path, ref-row path)
+def _path_ratio(kernel_path: str, ref_path: str):
+    """Extractor for the kernel-vs-ref roofline gates: two dotted paths into
+    one payload, divided (machine speed cancels)."""
+
+    def extract(payload: dict) -> float:
+        kernel = float(_get(payload, kernel_path))
+        ref = float(_get(payload, ref_path))
+        if ref <= 0:
+            raise ValueError(f"ref-path fraction {ref_path} is {ref}; "
+                             "cannot normalize")
+        return kernel / ref
+
+    return extract
+
+
+def _serving_p99_batches(payload: dict) -> float:
+    """Near-saturation p99 in units of one measured batch service time: the
+    machine-robust serving tail gate (both numbers ran on the same box)."""
+    pt = next((p for p in payload.get("points", ())
+               if abs(float(p.get("offered_x_drain", -1)) - 0.8) < 1e-6),
+              None)
+    if pt is None:
+        raise KeyError("points[offered_x_drain=0.8]")
+    batch_ms = float(_get(payload, "batch_service_ms"))
+    if batch_ms <= 0:
+        raise ValueError(f"batch_service_ms is {batch_ms}; cannot normalize")
+    return float(pt["p99_ms"]) / batch_ms
+
+
+# (suite, metric name, extractor(payload) -> normalized ratio, higher_is_better)
 METRICS = [
     ("scan_paths", f"scan_paths/{t}_hbm_frac",
-     f"tiers.{t}.interpret.frac_of_hbm_bw", f"tiers.{t}.ref.frac_of_hbm_bw")
+     _path_ratio(f"tiers.{t}.interpret.frac_of_hbm_bw",
+                 f"tiers.{t}.ref.frac_of_hbm_bw"), True)
     for t in ("f32", "quantized", "residual")
 ] + [
     ("quantized_scan", "quantized_scan/adc_interpret_hbm_frac",
-     "adc_interpret.frac_of_hbm_bw", "adc.frac_of_hbm_bw"),
+     _path_ratio("adc_interpret.frac_of_hbm_bw", "adc.frac_of_hbm_bw"),
+     True),
+    ("serving", "serving/p99_batches_at_0.8x", _serving_p99_batches, False),
 ]
-
-
-def _normalized(payload: dict, kernel_path: str, ref_path: str) -> float:
-    kernel = float(_get(payload, kernel_path))
-    ref = float(_get(payload, ref_path))
-    if ref <= 0:
-        raise ValueError(f"ref-path fraction {ref_path} is {ref}; cannot "
-                         "normalize")
-    return kernel / ref
 
 
 def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
           max_regression: float) -> list[str]:
     """Returns a list of failure messages (empty = ratchet holds)."""
     failures: list[str] = []
-    for suite, name, kernel_path, ref_path in METRICS:
+    for suite, name, extract, higher_is_better in METRICS:
         fresh_file = fresh_dir / f"BENCH_{suite}.json"
         committed_file = committed_dir / f"BENCH_{suite}.json"
         if not fresh_file.exists():
@@ -77,20 +108,28 @@ def check(fresh_dir: pathlib.Path, committed_dir: pathlib.Path,
             continue
         committed = json.loads(committed_file.read_text())
         try:
-            r_fresh = _normalized(fresh, kernel_path, ref_path)
-            r_committed = _normalized(committed, kernel_path, ref_path)
+            r_fresh = extract(fresh)
+            r_committed = extract(committed)
         except KeyError as e:
             print(f"[ratchet] {name}: metric {e} absent (older schema) — "
                   "skipping")
             continue
-        floor = r_committed * (1.0 - max_regression)
-        verdict = "OK" if r_fresh >= floor else "REGRESSED"
+        if higher_is_better:
+            bound = r_committed * (1.0 - max_regression)
+            ok = r_fresh >= bound
+            word = "floor"
+        else:
+            bound = r_committed * (1.0 + max_regression)
+            ok = r_fresh <= bound
+            word = "ceiling"
         print(f"[ratchet] {name}: fresh={r_fresh:.4f} committed="
-              f"{r_committed:.4f} floor={floor:.4f} {verdict}")
-        if r_fresh < floor:
+              f"{r_committed:.4f} {word}={bound:.4f} "
+              f"{'OK' if ok else 'REGRESSED'}")
+        if not ok:
             failures.append(
-                f"{name}: kernel/ref HBM-bw ratio {r_fresh:.4f} fell more "
-                f"than {max_regression:.0%} below committed {r_committed:.4f}")
+                f"{name}: normalized ratio {r_fresh:.4f} regressed more "
+                f"than {max_regression:.0%} past committed "
+                f"{r_committed:.4f} ({word} {bound:.4f})")
     return failures
 
 

@@ -27,6 +27,7 @@ SUITES = [
     ("quantized_scan", "benchmarks.quantized_scan"),
     ("scan_paths", "benchmarks.scan_paths"),
     ("serving", "benchmarks.serving_frontend"),
+    ("churn", "benchmarks.churn"),
     ("fig2", "benchmarks.fig2_motivation"),
     ("fig11", "benchmarks.fig11_convergence"),
     ("table1", "benchmarks.table1_vary_k"),

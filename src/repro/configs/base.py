@@ -184,6 +184,12 @@ class LiraSystemConfig:
     pq_m: int = 16                  # PQ subspaces (dim % pq_m == 0)
     pq_ks: int = 256                # codewords/subspace (≤ 256 → uint8 codes)
     rerank: int = 4                 # shortlist depth r: rerank r·k per partition
+    # mutable-index knobs (serving/engine.py insert/delete/maybe_repartition):
+    eta: float = 0.0                # replica fraction refreshed on repartition
+                                    # (set from BuildConfig.eta at build time)
+    repartition_threshold: float = 0.25  # staleness ((misassigned inserts +
+                                    # tombstones) / live rows) at which
+                                    # maybe_repartition() fires
     # DEPRECATED read-only aliases of `tier`, kept one release for legacy
     # callers. When `tier` is set they are (re)derived from it in
     # __post_init__, so dataclasses.replace(cfg, quantized=...) on a cfg whose

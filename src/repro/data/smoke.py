@@ -74,7 +74,9 @@ def make_smoke_inputs(config, shape, mesh, seed: int = 0):
             for name, spec in specs.items():
                 if name in store:
                     continue
-                if name == "codes":  # PQ codewords, bounded by pq_ks
+                if name == "occupancy":  # live slots = the non-padding ids
+                    store[name] = jnp.asarray(ids >= 0)
+                elif name == "codes":  # PQ codewords, bounded by pq_ks
                     store[name] = jnp.asarray(host.integers(
                         0, config.pq_ks, spec.shape).astype(spec.dtype))
                 elif jnp.issubdtype(spec.dtype, jnp.integer):

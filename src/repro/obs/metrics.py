@@ -46,6 +46,11 @@ NPROBE_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
 BATCH_ROWS_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
                       512.0, 1024.0)
 
+# per-partition staleness fractions ((misassigned inserts + tombstones) /
+# live rows, serving/engine.py maybe_repartition): ~2× edges around the
+# default 0.25 repartition threshold; > 1.0 means more churn than content
+STALENESS_BUCKETS = (0.01, 0.02, 0.05, 0.1, 0.25, 0.5, 1.0, 2.0, 5.0)
+
 
 def _key(labels: dict) -> tuple:
     return tuple(sorted((str(k), str(v)) for k, v in labels.items()))

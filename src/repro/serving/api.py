@@ -129,6 +129,10 @@ class SearchStats:
     dedup_hits: int = 0             # duplicate candidate slots merged away
     latency_ms: float = 0.0         # end-to-end latency (0.0 when not traced)
     stages: Optional[dict] = None   # {"queue": ms, "serve.device": ms, ...}
+    # ---- mutable-index fields: the store epoch that served this call. Every
+    # insert/delete/compact/repartition bumps it (mutations drain the
+    # front-end first, so a coalesced batch never spans two epochs).
+    epoch: int = 0
 
 
 @dataclasses.dataclass

@@ -141,10 +141,15 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
     extra_fields = tuple(n for n in tier.store_specs(cfg)
                          if n not in tiers.BASE_FIELDS)
 
-    def f(q_loc, valid_loc, params, cents, vecs_loc, ids_loc, *extras):
+    def f(q_loc, valid_loc, params, cents, vecs_loc, ids_loc, occ_loc, *extras):
         # q_loc: [q_row, d]; valid_loc: [q_row] bool (False = batch padding);
-        # vecs_loc: [b_loc, cap, d]; ids_loc: [b_loc, cap]
+        # vecs_loc: [b_loc, cap, d]; ids_loc/occ_loc: [b_loc, cap]
         # extras: the tier's non-base store fields, in declaration order
+        # tombstoned/free slots must never surface ids: composing occupancy
+        # into the id plane up front reuses the scan layer's universal id<0
+        # invalid sentinel, so every impl × tier masks holes identically —
+        # and a fully-occupied store is bit-identical to the static path
+        ids_loc = jnp.where(occ_loc, ids_loc, -1)
         # jax.named_scope labels the serving stages in profiler captures
         # (TensorBoard op_profile groups HLO ops under these names — the
         # --profile-dir recipe in README "Observability"); it is a pure
@@ -235,6 +240,7 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
     param_spec = jax.tree.map(lambda _: P(), probing_param_specs_cache(cfg))
     in_specs = (P(bspec, None), P(bspec), param_spec,
                 pspec_map["centroids"], pspec_map["vectors"], pspec_map["ids"],
+                pspec_map["occupancy"],
                 *(pspec_map[n] for n in extra_fields))
 
     out_specs = (P(bspec, None), P(bspec, None), P(bspec), P(bspec))
@@ -244,8 +250,14 @@ def make_serve_step(cfg: LiraSystemConfig, mesh, n_queries: int, *, sigma: float
     def serve_step(params, store, queries, valid=None):
         if valid is None:
             valid = jnp.ones((n_queries,), jnp.bool_)
+        # stores built before the mutable-index refactor (and raw test store
+        # dicts) carry no occupancy plane: a dense store's occupancy is
+        # exactly its id validity, so synthesize it
+        occ = store.get("occupancy")
+        if occ is None:
+            occ = store["ids"] >= 0
         args = (queries, valid, params, store["centroids"], store["vectors"],
-                store["ids"], *(store[n] for n in extra_fields))
+                store["ids"], occ, *(store[n] for n in extra_fields))
         return shard_map(
             f, mesh=mesh,
             in_specs=in_specs,
@@ -363,6 +375,12 @@ class LiraEngine:
     store: dict
     mesh: jax.sharding.Mesh
     sigma: float = 0.5
+    # store epoch: bumped by every mutation (insert/delete/compact/
+    # repartition). Searches stamp it into SearchStats.epoch; shape-changing
+    # mutations additionally enter the serve-fn cache key via cfg.capacity —
+    # same-shape mutations MUST keep hitting the compiled steps (new device
+    # arrays of unchanged shape/dtype never retrace a jitted fn).
+    epoch: int = 0
     # attached serving front-end (serving/frontend.py); search_one routes
     # through it when present. Not part of engine identity or checkpoints.
     frontend: Optional[object] = dataclasses.field(default=None, repr=False,
@@ -378,6 +396,11 @@ class LiraEngine:
                                            compare=False)
     _overflow_streak: int = dataclasses.field(default=0, repr=False,
                                               compare=False)
+    # per-partition count of inserts that landed OFF their argmin partition
+    # (no free slot nearer): the drift half of the staleness signal, reset by
+    # repartition. None = lazily zeros (stores built before this field).
+    _stale_inserts: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def _tracer(self):
         return self.tracer if self.tracer is not None else obs_trace.NOOP
@@ -446,7 +469,7 @@ class LiraEngine:
             tier=tier.name, pq_m=config.pq_m or 0, pq_ks=config.pq_ks,
             rerank=config.rerank, impl=config.impl,
             store_dtype=config.store_dtype, q_cap_factor=config.q_cap_factor,
-            auto_q_cap=config.auto_q_cap,
+            auto_q_cap=config.auto_q_cap, eta=config.eta,
         )
         # the tier owns store construction (and may amend cfg: PQ resolves
         # pq_m, clamps pq_ks for tiny stores)
@@ -477,8 +500,12 @@ class LiraEngine:
             impl if impl is not None else getattr(self.cfg, "impl", "auto"))
         tier = tiers.resolve(tier).name
         k = self.cfg.k if k is None else int(k)
+        # capacity is the store-shape lever mutations move: growing/compacting
+        # changes every per-slot plane's shape (and PQ's rerank clamp), so it
+        # must key the cache — while same-shape mutations (insert into free
+        # slots, delete) leave the key intact and keep hitting compiled steps
         key = (nq_pad, float(sigma), tier, impl, k,
-               float(self.cfg.q_cap_factor))
+               float(self.cfg.q_cap_factor), int(self.cfg.capacity))
         fn = self._serve_cache.pop(key, None)
         cache_hit = fn is not None
         if fn is None:
@@ -542,6 +569,7 @@ class LiraEngine:
                 tier_obj = tiers.resolve(
                     req.tier if req.tier is not None else self.cfg.tier)
                 k = self.cfg.k if req.k is None else int(req.k)
+                self._ensure_occupancy()
                 missing = [f for f in tier_obj.store_specs(self.cfg)
                            if f not in self.store]
                 if missing:
@@ -612,7 +640,8 @@ class LiraEngine:
             stats=api.SearchStats(
                 tier=tier_obj.name, impl=impl, k=k, sigma=float(sigma),
                 bucket=nq_pad, cache_hit=cache_hit, dedup_hits=dedup_hits,
-                latency_ms=sp_root.duration_ms, stages=stages))
+                latency_ms=sp_root.duration_ms, stages=stages,
+                epoch=self.epoch))
         if getattr(self.cfg, "auto_q_cap", False):
             self._maybe_bump_q_cap(result.overflow)
         return result
@@ -685,6 +714,352 @@ class LiraEngine:
                     "current dispatch-slack factor").set(
                         float(self.cfg.q_cap_factor))
 
+    # ------------------------------------------------------------- mutation
+    #
+    # The store lifecycle is epoch-versioned: every mutation drains the
+    # front-end (no coalesced batch may span two epochs), rewrites the
+    # per-slot planes the tier declares (tiers.Tier.slot_fields), and bumps
+    # ``epoch``. Shape is the only thing that invalidates compiled serve
+    # steps: growing or compacting ``capacity`` changes plane shapes (and
+    # PQ's rerank clamp), so it enters the serve-fn cache key and clears the
+    # cache; same-shape mutations swap in new device arrays of identical
+    # shape/dtype, which jitted fns accept without retracing.
+
+    def _ensure_occupancy(self) -> None:
+        """Stores predating the mutable-index refactor (and raw test store
+        dicts) carry no occupancy plane — a dense store's occupancy is
+        exactly its id validity."""
+        if "occupancy" not in self.store:
+            self.store = dict(self.store)
+            self.store["occupancy"] = self.store["ids"] >= 0
+
+    def _staleness_counters(self) -> np.ndarray:
+        if (self._stale_inserts is None
+                or len(self._stale_inserts) != self.cfg.n_partitions):
+            self._stale_inserts = np.zeros(self.cfg.n_partitions, np.int64)
+        return self._stale_inserts
+
+    def _quiesce_frontend(self) -> None:
+        """Epoch-swap atomicity: flush the front-end's in-flight coalesced
+        batches BEFORE mutating, so every batch is served wholly within one
+        epoch (its results carry the pre-mutation SearchStats.epoch; requests
+        submitted after the mutation see the bumped one)."""
+        if self.frontend is not None:
+            self.frontend.quiesce()
+
+    def _bump_epoch(self, *, shape_changed: bool = False) -> None:
+        self.epoch += 1
+        if shape_changed:
+            self._serve_cache.clear()
+        m = self._registry()
+        m.counter("lira_engine_epoch_bumps_total",
+                  "store mutations (insert/delete/compact/repartition)").inc()
+        if shape_changed:
+            m.counter("lira_engine_shape_epoch_bumps_total",
+                      "shape-changing mutations (capacity moved; compiled "
+                      "serve steps invalidated)").inc()
+        m.gauge("lira_engine_epoch", "current store epoch").set(
+            float(self.epoch))
+
+    def _tombstones_per_partition(self) -> np.ndarray:
+        """A tombstone is a cleared-occupancy slot still holding an id ≥ 0
+        (delete leaves the id plane behind; reuse or compaction heals it)."""
+        occ = np.asarray(self.store["occupancy"])
+        ids = np.asarray(self.store["ids"])
+        return (~occ & (ids >= 0)).sum(1).astype(np.int64)
+
+    def _update_store_gauges(self) -> None:
+        occ = np.asarray(self.store["occupancy"])
+        live = int(occ.sum())
+        tomb = int(self._tombstones_per_partition().sum())
+        m = self._registry()
+        m.gauge("lira_engine_live_slots", "occupied store slots").set(live)
+        m.gauge("lira_engine_tombstone_slots",
+                "deleted-but-uncompacted slots (insertable, id not yet "
+                "healed)").set(tomb)
+        m.gauge("lira_engine_free_slots",
+                "never-written or compacted-away slots").set(
+                    occ.size - live - tomb)
+
+    _GROW_SLACK = 1.5  # capacity overshoot per grow, so steady insert
+    #                    streams amortize recompiles instead of growing (and
+    #                    recompiling) once per insert batch
+
+    def insert(self, x, ids) -> int:
+        """Append rows to the live index. Each row takes a free slot in the
+        nearest partition that has one (within ``mutable.PLACE_WINDOW``
+        nearest); rows that land off their argmin partition count toward the
+        staleness that triggers ``maybe_repartition``. When some row finds no
+        slot, every per-slot plane grows (with ``_GROW_SLACK``) — a shape
+        change that invalidates compiled serve steps; otherwise the mutation
+        is same-shape and the jit cache keeps hitting. New rows get no η
+        replicas until the next repartition refreshes the whole replica set.
+        Callers own id uniqueness (an id inserted twice becomes two live
+        rows, deduped at merge time like a replica). Returns rows inserted."""
+        from repro.serving import mutable
+
+        x = np.asarray(x, np.float32)
+        if x.ndim == 1:
+            x = x[None, :]
+        ids = np.atleast_1d(np.asarray(ids, np.int32))
+        if x.shape[0] != ids.shape[0]:
+            raise ValueError(f"{x.shape[0]} rows but {ids.shape[0]} ids")
+        if x.shape[1] != self.cfg.dim:
+            raise ValueError(f"rows have dim {x.shape[1]}, index has "
+                             f"dim {self.cfg.dim}")
+        if x.shape[0] == 0:
+            return 0
+        self._ensure_occupancy()
+        self._quiesce_frontend()
+        tier = tiers.resolve(self.cfg.tier)
+        tr = self._tracer()
+        with tr.span("engine.insert", rows=int(x.shape[0])) as sp:
+            occ = np.asarray(self.store["occupancy"])
+            cents = np.asarray(self.store["centroids"], np.float32)
+            d2 = ((x * x).sum(1)[:, None] - 2.0 * x @ cents.T
+                  + (cents * cents).sum(1)[None, :])
+            plan = mutable.plan_insert(occ, d2)
+            parts, slots, mis = plan.parts, plan.slots, plan.misassigned
+            shape_changed = not bool(plan.ok.all())
+            if shape_changed:
+                # grow so every unplaced row fits in its argmin partition
+                occ_w = occ.copy()
+                occ_w[parts[plan.ok], slots[plan.ok]] = True
+                fail = ~plan.ok
+                demand = occ_w.sum(1) + np.bincount(
+                    d2[fail].argmin(1), minlength=self.cfg.n_partitions)
+                new_cap = max(int(demand.max()),
+                              int(np.ceil(self.cfg.capacity
+                                          * self._GROW_SLACK)))
+                planes = mutable.grow_store(
+                    {n: self.store[n] for n in tier.slot_fields(self.cfg)},
+                    new_cap)
+                self.store = dict(self.store)
+                self.store.update(
+                    {n: jnp.asarray(a) for n, a in planes.items()})
+                self.cfg = dataclasses.replace(self.cfg, capacity=new_cap)
+                occ_w = mutable.grow_store({"occupancy": occ_w},
+                                           new_cap)["occupancy"]
+                replan = mutable.plan_insert(occ_w, d2[fail])
+                assert bool(replan.ok.all()), "grown store must fit all rows"
+                parts = np.where(plan.ok, parts, -1)
+                slots = np.where(plan.ok, slots, -1)
+                parts[fail], slots[fail] = replan.parts, replan.slots
+                mis = mis.copy()
+                mis[fail] = replan.misassigned
+            # the tier re-encodes content planes for the destination
+            # partitions; ids/occupancy are engine bookkeeping
+            rows = tier.encode_rows(self.cfg, self.store, x, parts)
+            store = dict(self.store)
+            p, s = jnp.asarray(parts), jnp.asarray(slots)
+            for name, vals in rows.items():
+                store[name] = store[name].at[p, s].set(
+                    jnp.asarray(vals).astype(store[name].dtype))
+            store["ids"] = store["ids"].at[p, s].set(jnp.asarray(ids))
+            store["occupancy"] = store["occupancy"].at[p, s].set(True)
+            self.store = store
+            np.add.at(self._staleness_counters(), parts[mis], 1)
+            sp.set(misassigned=int(mis.sum()), grew=shape_changed)
+        self._bump_epoch(shape_changed=shape_changed)
+        m = self._registry()
+        m.counter("lira_engine_inserts_total", "rows inserted").inc(
+            int(x.shape[0]))
+        m.counter("lira_engine_misassigned_inserts_total",
+                  "inserts placed off their argmin partition (staleness "
+                  "source)").inc(int(mis.sum()))
+        if shape_changed:
+            m.counter("lira_engine_capacity_grows_total",
+                      "insert-driven capacity growths").inc()
+        self._update_store_gauges()
+        return int(x.shape[0])
+
+    def delete(self, ids) -> int:
+        """Tombstone every live slot holding one of ``ids`` (replicas
+        included): occupancy clears, the id plane keeps the id until the slot
+        is reused or compacted. Same-shape — zero recompiles. Returns the
+        number of slots tombstoned (0 for wholly unknown ids, no epoch
+        bump)."""
+        self._ensure_occupancy()
+        ids = np.unique(np.atleast_1d(np.asarray(ids, np.int64)))
+        occ = np.asarray(self.store["occupancy"])
+        hit = occ & np.isin(np.asarray(self.store["ids"]), ids)
+        removed = int(hit.sum())
+        m = self._registry()
+        m.counter("lira_engine_deletes_total", "ids passed to delete").inc(
+            len(ids))
+        m.counter("lira_engine_deleted_slots_total",
+                  "live slots tombstoned by delete").inc(removed)
+        if not removed:
+            return 0
+        self._quiesce_frontend()
+        tr = self._tracer()
+        with tr.span("engine.delete", slots=removed):
+            self.store = dict(self.store)
+            self.store["occupancy"] = jnp.asarray(occ & ~hit)
+        self._bump_epoch()
+        self._update_store_gauges()
+        return removed
+
+    def compact(self) -> int:
+        """Repack live slots to the front of every partition and shrink
+        capacity to the max live count (floored at cfg.k — the scan's top-k
+        needs that many candidate slots): tombstones and holes are erased,
+        dead tails reset to pad sentinels. Usually a shape change (compiled
+        serve steps invalidated). Returns reclaimed slots (Δcapacity · B)."""
+        from repro.serving import mutable
+
+        self._ensure_occupancy()
+        self._quiesce_frontend()
+        tier = tiers.resolve(self.cfg.tier)
+        tr = self._tracer()
+        with tr.span("engine.compact",
+                     capacity=int(self.cfg.capacity)) as sp:
+            occ = np.asarray(self.store["occupancy"])
+            packed, new_cap = mutable.compact_store(
+                {n: self.store[n] for n in tier.slot_fields(self.cfg)}, occ,
+                min_capacity=self.cfg.k)
+            shape_changed = new_cap != self.cfg.capacity
+            reclaimed = (self.cfg.capacity - new_cap) * self.cfg.n_partitions
+            store = dict(self.store)
+            store.update({n: jnp.asarray(a) for n, a in packed.items()})
+            self.store = store
+            if shape_changed:
+                self.cfg = dataclasses.replace(self.cfg, capacity=new_cap)
+            sp.set(new_capacity=new_cap, reclaimed=reclaimed)
+        self._bump_epoch(shape_changed=shape_changed)
+        m = self._registry()
+        m.counter("lira_engine_compactions_total", "compaction passes").inc()
+        m.counter("lira_engine_reclaimed_slots_total",
+                  "slots reclaimed by compaction").inc(reclaimed)
+        self._update_store_gauges()
+        return reclaimed
+
+    def staleness(self) -> float:
+        """(misassigned inserts + tombstoned slots) / live rows — the drift
+        measure ``maybe_repartition`` gates on (cfg.repartition_threshold).
+        Tombstones count because holes dilute every probe of their partition;
+        misassigned inserts because the probing model ranks partitions by
+        content the argmin says belongs elsewhere (the boundary drift IRLI's
+        re-assignment loop repairs)."""
+        self._ensure_occupancy()
+        live = int(np.asarray(self.store["occupancy"]).sum())
+        tomb = int(self._tombstones_per_partition().sum())
+        return (int(self._staleness_counters().sum()) + tomb) / max(1, live)
+
+    def maybe_repartition(self, *, force: bool = False,
+                          max_moves: Optional[int] = None) -> bool:
+        """IRLI-style iterative re-assignment (arxiv 2103.09944), gated on
+        staleness: when (misassigned inserts + tombstones) / live rows
+        reaches ``cfg.repartition_threshold`` (or ``force=True``), re-assign
+        every live row to its argmin partition (``max_moves`` caps the pass
+        to the most-misassigned rows, by margin), re-encode through the tier,
+        refresh the η replica set via core.redundancy.plan_redundancy, and
+        rebuild the slot layout — erasing tombstones and resetting staleness.
+        Centroids, codebooks and the probing model are unchanged: drift is
+        repaired by moving rows, not retraining. Returns True iff a
+        repartition ran."""
+        self._ensure_occupancy()
+        occ = np.asarray(self.store["occupancy"])
+        frac = ((self._staleness_counters()
+                 + self._tombstones_per_partition())
+                / np.maximum(1, occ.sum(1)))
+        m = self._registry()
+        m.histogram("lira_engine_partition_staleness",
+                    "per-partition staleness fraction at repartition checks",
+                    buckets=obs_metrics.STALENESS_BUCKETS).observe_many(frac)
+        if not force and self.staleness() < getattr(
+                self.cfg, "repartition_threshold", 0.25):
+            return False
+        self._repartition(max_moves=max_moves)
+        return True
+
+    def _repartition(self, max_moves: Optional[int] = None) -> None:
+        from repro.core.redundancy import plan_redundancy, replica_rows
+        from repro.serving import mutable
+
+        self._quiesce_frontend()
+        tier = tiers.resolve(self.cfg.tier)
+        tr = self._tracer()
+        with tr.span("engine.repartition") as sp:
+            occ = np.asarray(self.store["occupancy"])
+            ids = np.asarray(self.store["ids"])
+            cents = np.asarray(self.store["centroids"], np.float32)
+            nb, cap = occ.shape
+            pb, ps = np.nonzero(occ)
+            if len(pb) == 0:
+                return
+            x = np.asarray(self.store["vectors"])[pb, ps].astype(np.float32)
+            rid = ids[pb, ps]
+            # one primary copy per id (η replicas are regenerated below):
+            # keep the copy nearest its own partition's centroid
+            d_own = ((x - cents[pb]) ** 2).sum(1)
+            order = np.lexsort((d_own, rid))
+            keep_first = np.ones(len(order), bool)
+            keep_first[1:] = rid[order][1:] != rid[order][:-1]
+            keep = order[keep_first]
+            xu, idu, cur = x[keep], rid[keep], pb[keep].astype(np.int64)
+            d2 = ((xu * xu).sum(1)[:, None] - 2.0 * xu @ cents.T
+                  + (cents * cents).sum(1)[None, :])
+            best = d2.argmin(1).astype(np.int64)
+            assign, mis = best, best != cur
+            if max_moves is not None and int(mis.sum()) > int(max_moves):
+                # partial pass: only the most-misassigned rows move, ranked
+                # by how much closer their argmin centroid is
+                rows_i = np.arange(len(xu))
+                margin = d2[rows_i, cur] - d2[rows_i, best]
+                cand = np.flatnonzero(mis)
+                top = cand[np.argsort(-margin[cand],
+                                      kind="stable")[:int(max_moves)]]
+                assign = cur.copy()
+                assign[top] = best[top]
+            moved = int((assign != cur).sum())
+            x_all, id_all, a_all = xu, idu, assign
+            if getattr(self.cfg, "eta", 0.0) > 0:
+                # replica refresh: boundary points re-picked by the probing
+                # model against the DRIFTED assignment, so replicas track
+                # the boundaries the churn moved
+                plan = plan_redundancy(self.params, xu,
+                                       assign.astype(np.int32), cents,
+                                       eta=self.cfg.eta, sigma=self.sigma)
+                rv, ri, ra = replica_rows(plan, xu, idu)
+                x_all = np.concatenate([xu, rv], 0)
+                id_all = np.concatenate([idu, ri], 0)
+                a_all = np.concatenate([assign, ra.astype(np.int64)], 0)
+            slots, counts = mutable.layout_rows(a_all, nb)
+            needed = max(int(counts.max(initial=1)), self.cfg.k)
+            # capacity only grows when the new layout demands it — a layout
+            # that still fits keeps the shape (and the compiled serve steps)
+            shape_changed = needed > cap
+            new_cap = needed if shape_changed else cap
+            if shape_changed:
+                self.cfg = dataclasses.replace(self.cfg, capacity=new_cap)
+            # full re-encode through the tier: codebooks/centroids/probing
+            # are unchanged, so unmoved rows keep bit-identical codes
+            rows = tier.encode_rows(self.cfg, self.store, x_all, a_all)
+            rows["ids"] = id_all.astype(np.int32)
+            store = dict(self.store)
+            for name in tier.slot_fields(self.cfg):
+                old = np.asarray(self.store[name])
+                plane = np.full((nb, new_cap, *old.shape[2:]),
+                                mutable.fill_value(name), old.dtype)
+                if name == "occupancy":
+                    plane[a_all, slots] = True
+                else:
+                    plane[a_all, slots] = np.asarray(
+                        rows[name]).astype(old.dtype)
+                store[name] = jnp.asarray(plane)
+            self.store = store
+            self._stale_inserts = np.zeros(nb, np.int64)
+            sp.set(rows=len(xu), moved=moved, replicas=len(x_all) - len(xu),
+                   capacity=new_cap)
+        self._bump_epoch(shape_changed=shape_changed)
+        m = self._registry()
+        m.counter("lira_engine_repartitions_total",
+                  "IRLI-style re-assignment passes").inc()
+        m.counter("lira_engine_repartition_moved_rows_total",
+                  "rows moved to their argmin partition").inc(moved)
+        self._update_store_gauges()
+
     # ------------------------------------------------------------ persistence
 
     def save(self, directory, step: int = 0):
@@ -699,9 +1074,13 @@ class LiraEngine:
                 return np.asarray(jnp.asarray(leaf).astype(jnp.float32))
             return np.asarray(leaf)
 
+        self._ensure_occupancy()  # mutable-index state always round-trips
         tree = jax.tree.map(_savable, {"params": self.params,
                                        "store": dict(self.store)})
-        extra = {"config": dataclasses.asdict(self.cfg), "sigma": self.sigma}
+        extra = {"config": dataclasses.asdict(self.cfg), "sigma": self.sigma,
+                 "epoch": int(self.epoch),
+                 "stale_inserts": [int(v) for v in
+                                   self._staleness_counters()]}
         return CheckpointManager(directory).save(step, tree, extra=extra)
 
     @classmethod
@@ -734,5 +1113,9 @@ class LiraEngine:
                       for name, spec in store_specs(cfg).items()},
         }
         tree, _, extra = mgr.restore(template, step=step)
+        stale = extra.get("stale_inserts")
         return cls(cfg=cfg, params=tree["params"], store=tree["store"],
-                   mesh=mesh, sigma=float(extra.get("sigma", 0.5)))
+                   mesh=mesh, sigma=float(extra.get("sigma", 0.5)),
+                   epoch=int(extra.get("epoch", 0)),
+                   _stale_inserts=(np.asarray(stale, np.int64)
+                                   if stale is not None else None))

@@ -354,6 +354,15 @@ class ServingFrontend:
         stream). Returns the number of serve calls issued."""
         return sum(self._flush_group(key) for key in list(self._groups))
 
+    def quiesce(self) -> int:
+        """Epoch barrier for store mutations (``LiraEngine.insert/delete/
+        compact/maybe_repartition`` call this before touching the store):
+        drain every queued request so no coalesced batch spans two epochs —
+        everything in flight is served against the pre-mutation store and
+        carries its ``SearchStats.epoch``; requests submitted afterwards see
+        the bumped epoch atomically. Returns the serve calls issued."""
+        return self.drain()
+
     def _flush_group(self, key: tuple) -> int:
         """Serve one group's queue: highest-priority first, at most
         ``max_batch`` coalesced rows per engine call."""
@@ -415,7 +424,8 @@ class ServingFrontend:
                             cache_hit=res.stats.cache_hit,
                             queue_ms=queue_ms, batch_size=len(queries),
                             shed=False, dedup_hits=res.stats.dedup_hits,
-                            latency_ms=latency_ms, stages=stages))
+                            latency_ms=latency_ms, stages=stages,
+                            epoch=res.stats.epoch))
                     self._c_served().inc(**self._lbl)
                     self._h_queue().observe(queue_ms, **self._lbl)
                     self._h_latency().observe(latency_ms, **self._lbl)

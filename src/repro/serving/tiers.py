@@ -33,7 +33,7 @@ from repro.models.api import sds
 
 # fields every tier must provide — the serve step's probing/dispatch/rerank
 # operands. Tiers append their own scan-stage fields after these.
-BASE_FIELDS = ("centroids", "vectors", "ids")
+BASE_FIELDS = ("centroids", "vectors", "ids", "occupancy")
 
 _REGISTRY: dict[str, "Tier"] = {}
 
@@ -98,6 +98,7 @@ class Tier:
             "centroids": sds((b, d)),
             "vectors": sds((b, c, d), jnp.dtype(getattr(cfg, "store_dtype", "float32"))),
             "ids": sds((b, c), jnp.int32),
+            "occupancy": sds((b, c), jnp.bool_),
         }
 
     def store_pspecs(self, cfg=None) -> dict:
@@ -105,7 +106,18 @@ class Tier:
             "centroids": P(None, None),
             "vectors": P("model", None, None),
             "ids": P("model", None),
+            "occupancy": P("model", None),
         }
+
+    def slot_fields(self, cfg) -> tuple:
+        """Store fields indexed per (partition, slot) — the planes a mutation
+        must move together when rows are placed, tombstoned, or compacted.
+        Partition-level fields (centroids) and replicated operands (codebooks)
+        are excluded by construction: everything whose leading dims are
+        [n_partitions, capacity]."""
+        b, c = cfg.n_partitions, cfg.capacity
+        return tuple(name for name, spec in self.store_specs(cfg).items()
+                     if name != "centroids" and spec.shape[:2] == (b, c))
 
     # ---------------------------------------------------------------- build
 
@@ -118,9 +130,23 @@ class Tier:
         vectors = jnp.asarray(store_h.vectors)
         if vectors.dtype != dt:
             vectors = vectors.astype(dt)
+        ids = jnp.asarray(store_h.ids)
         store = {"centroids": jnp.asarray(store_h.centroids), "vectors": vectors,
-                 "ids": jnp.asarray(store_h.ids)}
+                 "ids": ids, "occupancy": ids >= 0}
         return store, cfg
+
+    # ------------------------------------------------------------- mutation
+
+    def encode_rows(self, cfg, store, x_new, parts) -> dict:
+        """Encode appended rows into this tier's per-slot planes: a dict of
+        slot-field name → [n_new, ...] rows ready to scatter into the free
+        slots the engine picked. ``parts`` is each row's destination partition
+        (residual tiers re-derive x − centroid against it); ``ids`` and
+        ``occupancy`` are placement bookkeeping the engine owns, so tiers
+        return only the content planes."""
+        del parts
+        dt = store["vectors"].dtype
+        return {"vectors": jnp.asarray(x_new).astype(dt)}
 
     # ---------------------------------------------------------------- serve
 
@@ -215,6 +241,28 @@ class PqTier(Tier):
             [quantized_tier.adc_lut(codebooks, ctx.q_loc),
              jnp.zeros((1, m, codebooks.shape[1]), jnp.float32)], 0)
         return {"lut_pad": lut_pad, "codes_loc": codes, "rk": rk}
+
+    def encode_rows(self, cfg, store, x_new, parts) -> dict:
+        import numpy as np
+
+        from repro.core import pq as pqmod
+
+        rows = super().encode_rows(cfg, store, x_new, parts)
+        cbs = jnp.asarray(store["codebooks"])
+        pq = pqmod.PQCodebook(codebooks=cbs, m=int(cbs.shape[0]),
+                              ks=int(cbs.shape[1]))
+        x = np.asarray(x_new, np.float32)
+        if self.residual:
+            # codes must encode the residual against the DESTINATION
+            # partition's centroid — re-derived here, not at original build
+            cents = np.asarray(store["centroids"], np.float32)[np.asarray(parts)]
+            x = x - cents
+        codes = pqmod.encode(pq, x)
+        rows["codes"] = jnp.asarray(codes).astype(store["codes"].dtype)
+        if self.residual:
+            rows["cterm"] = jnp.asarray(
+                pqmod.residual_cross_terms(pq, cents, codes))
+        return rows
 
 
 @register

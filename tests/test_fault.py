@@ -1,0 +1,161 @@
+"""Failure & straggler simulation tests (repro.distributed.fault).
+
+The pod-replicated control plane (DESIGN.md §5) simulated without hardware:
+power-of-two-choices routing, heartbeat-loss failover with in-flight replay,
+and hedged-request tail mitigation. Every test seeds its RNG — the policies
+are sampling-based, the assertions are exact.
+"""
+import pytest
+
+from repro.distributed.fault import Replica, ReplicaRouter, StragglerMitigator
+
+
+# ---------------------------------------------------------------- routing
+
+def test_pick_prefers_lower_inflight_of_two_choices():
+    router = ReplicaRouter(n_replicas=2, seed=0)
+    router.replicas[0].inflight = 10
+    # with only two replicas the two sampled choices are always {0, 1}, so
+    # the less-loaded replica must win every draw
+    for _ in range(50):
+        assert router.pick().rid == 1
+
+
+def test_pick_single_healthy_replica_needs_no_sampling():
+    router = ReplicaRouter(n_replicas=3, seed=1)
+    router.mark_failed(0)
+    router.mark_failed(2)
+    for _ in range(10):
+        assert router.pick().rid == 1
+
+
+def test_pick_with_no_healthy_replicas_raises():
+    router = ReplicaRouter(n_replicas=2, seed=0)
+    router.mark_failed(0)
+    router.mark_failed(1)
+    with pytest.raises(RuntimeError, match="no healthy replicas"):
+        router.pick()
+
+
+def test_pick_is_deterministic_under_seed():
+    ra, rb = ReplicaRouter(8, seed=7), ReplicaRouter(8, seed=7)
+    assert [ra.pick().rid for _ in range(32)] == [rb.pick().rid
+                                                 for _ in range(32)]
+
+
+def test_pick_spreads_load_across_equal_replicas():
+    router = ReplicaRouter(n_replicas=4, seed=3)
+    seen = set()
+    for _ in range(200):
+        r = router.pick()
+        seen.add(r.rid)
+    assert seen == {0, 1, 2, 3}
+
+
+# --------------------------------------------------------------- failover
+
+def test_mark_failed_requeues_inflight_and_recover_rejoins():
+    router = ReplicaRouter(n_replicas=3, seed=0)
+    router.replicas[1].inflight = 4
+    lost = router.mark_failed(1)
+    assert lost == 4 and router.requeued == 4
+    assert router.replicas[1].inflight == 0
+    assert not router.replicas[1].healthy
+    assert [r.rid for r in router.healthy()] == [0, 2]
+    router.recover(1)
+    assert [r.rid for r in router.healthy()] == [0, 1, 2]
+    # a second failure with nothing in flight replays nothing new
+    assert router.mark_failed(1) == 0 and router.requeued == 4
+
+
+def test_dispatch_serves_every_batch_exactly_once():
+    router = ReplicaRouter(n_replicas=4, seed=11)
+    served = router.dispatch(100)
+    assert sum(served.values()) == 100
+    assert router.requeued == 0
+
+
+def test_dispatch_mid_flight_failure_replays_on_healthy_replica():
+    router = ReplicaRouter(n_replicas=3, seed=5)
+    served = router.dispatch(60, fail_at=(30, 2))
+    # every batch still served exactly once, the doomed replica's in-flight
+    # batch replayed elsewhere
+    assert sum(served.values()) == 60
+    assert router.requeued == 1
+    assert not router.replicas[2].healthy
+    # the dead replica served only what it finished before the heartbeat loss
+    assert served[2] == router.replicas[2].served
+    assert served[0] + served[1] >= 30
+
+
+def test_dispatch_failure_spec_is_idempotent_after_death():
+    """fail_at only fires while its victim is healthy — a replayed batch
+    index must not re-kill (or double-count) the already-dead replica."""
+    router = ReplicaRouter(n_replicas=2, seed=9)
+    served = router.dispatch(10, fail_at=(0, 0))
+    assert sum(served.values()) == 10
+    assert router.requeued == 1
+    assert served[1] == 10  # the survivor absorbed everything
+
+
+# ---------------------------------------------------------------- hedging
+
+def _warm(mit, n=30, latency=1.0):
+    for _ in range(n):
+        mit.serve(latency)
+
+
+def test_straggler_hedge_caps_tail_latency():
+    router = ReplicaRouter(n_replicas=3, seed=2)
+    mit = StragglerMitigator(router, hedge_factor=3.0)
+    _warm(mit, 30, 1.0)                  # healthy history, median = 1.0
+    router.replicas[0].latency_scale = 100.0   # replica 0 becomes a straggler
+    lats = [mit.serve(1.0) for _ in range(200)]
+    assert mit.hedges > 0
+    # hedged requests complete at deadline + healthy service, never at the
+    # straggler's 100× latency
+    assert max(lats) < 100.0
+    assert max(lats) <= 3.0 * 1.0 + 1.0 + 1e-9
+
+
+def test_no_hedging_before_history_warmup():
+    router = ReplicaRouter(n_replicas=2, seed=4)
+    router.replicas[0].latency_scale = 50.0
+    mit = StragglerMitigator(router)
+    lats = [mit.serve(1.0) for _ in range(19)]   # < 20-sample history
+    assert mit.hedges == 0
+    assert any(lat == 50.0 for lat in lats)      # straggler latency unhedged
+
+
+def test_hedge_prefers_best_ewma_replica():
+    router = ReplicaRouter(n_replicas=3, seed=6)
+    mit = StragglerMitigator(router, hedge_factor=2.0)
+    _warm(mit, 25, 1.0)
+    router.replicas[0].latency_scale = 40.0
+    router.replicas[1].ewma = 5.0                # known-slow alternative
+    router.replicas[2].ewma = 0.5                # known-fast alternative
+    # keep serving until the straggler is drawn and hedged at least once
+    for _ in range(100):
+        mit.serve(1.0)
+    assert mit.hedges > 0
+    # the fast-EWMA replica absorbed hedges: its EWMA was updated toward the
+    # healthy service latency (ewma moves from 0.5 toward 1.0)
+    assert router.replicas[2].ewma > 0.5
+
+
+def test_hedging_deterministic_under_seed():
+    def run():
+        router = ReplicaRouter(n_replicas=4, seed=13)
+        router.replicas[3].latency_scale = 30.0
+        mit = StragglerMitigator(router)
+        _warm(mit, 20, 1.0)
+        return [mit.serve(1.0) for _ in range(100)], mit.hedges
+
+    (lat_a, hedges_a), (lat_b, hedges_b) = run(), run()
+    assert lat_a == lat_b and hedges_a == hedges_b
+
+
+def test_replica_dataclass_defaults():
+    r = Replica(rid=7)
+    assert (r.healthy, r.inflight, r.served, r.latency_scale) == (
+        True, 0, 0, 1.0)

@@ -88,12 +88,19 @@ def test_store_specs_delegate_to_tier():
     cfg = LiraSystemConfig(arch="t", dim=16, n_partitions=4, capacity=32, k=5,
                            nprobe_max=4, tier="residual_pq", pq_m=4, pq_ks=16)
     specs = store_specs(cfg)
-    assert list(specs) == ["centroids", "vectors", "ids", "codes", "codebooks",
-                           "cterm"]
+    assert list(specs) == ["centroids", "vectors", "ids", "occupancy",
+                           "codes", "codebooks", "cterm"]
     sp = store_pspecs(None, cfg)
     assert set(sp) == set(specs)
     cfg_f = dataclasses.replace(cfg, tier="f32")
-    assert list(store_specs(cfg_f)) == ["centroids", "vectors", "ids"]
+    assert list(store_specs(cfg_f)) == ["centroids", "vectors", "ids",
+                                        "occupancy"]
+    # per-slot planes (what mutations move together) exclude the replicated
+    # operands — codebooks ride per subspace, centroids per partition
+    assert tiers.resolve("residual_pq").slot_fields(cfg) == (
+        "vectors", "ids", "occupancy", "codes", "cterm")
+    assert tiers.resolve("f32").slot_fields(cfg_f) == (
+        "vectors", "ids", "occupancy")
 
 
 def test_missing_store_fields_rejected(f32_engine):
