@@ -1,0 +1,176 @@
+"""Cluster-serving gate (ISSUE 10): throughput scaling vs R, hedged tail,
+and fault injection with zero lost queries.
+
+Three sections over one set of built shard engines (control planes are
+re-wrapped per section — engines hold no routing state):
+
+  * **throughput vs R** — the same batch stream through R=1 and R=2 replica
+    groups, REAL measured engine service charged to each winning replica's
+    virtual busy-time; cluster makespan is the busiest replica (shards and
+    replicas are parallel pods). Gate: R=2 throughput ≥ ``MIN_SCALING``× R=1
+    (the ratio is dimensionless — box speed cancels — so it ratchets).
+  * **hedged p99** — R=3 with one 25× straggler, ``fixed_service_s`` virtual
+    latencies (the policy outcome is exactly deterministic, so the committed
+    ratio never drifts with machine noise); the same seeded stream with
+    hedging off then on. Gate: hedging cuts p99 below the straggler's
+    latency; the p99 ratio is the ratcheted series.
+  * **fault injection** — a replica killed mid-stream with a batch in
+    flight: every batch must still be answered (zero lost queries), results
+    bit-identical to an unkilled reference run, recall vs exact ground truth
+    unchanged. Exactness conditions: σ=-1 + rerank·k ≥ capacity (see
+    tests/test_cluster.py).
+
+Returns the JSON payload persisted as ``BENCH_cluster.json``;
+``benchmarks/perf_ratchet.py`` gates ``throughput.scaling_r2_over_r1`` and
+``hedging.p99_ratio`` against the committed snapshot.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ground_truth as gt
+from repro.core.metrics import recall_at_k
+from repro.data import make_vector_dataset
+from repro.launch.mesh import make_test_mesh
+from repro.obs import MetricsRegistry
+from repro.serving import BuildConfig, ClusterConfig, LiraCluster, SearchRequest
+from repro.utils.clock import FakeClock
+
+N, NQ, DIM, K = 2_000, 256, 16, 10
+B = 4                       # partitions per shard
+S = 2                       # LANNS level-1 shards
+BS = 32                     # query rows per batch
+RERANK = 64                 # rerank·k ≥ capacity → exact over scanned rows
+SEED = 11
+SERVICE_S = 1e-3            # virtual per-batch service (hedging section)
+STRAGGLER = 25.0
+N_THROUGHPUT, N_TAIL, N_FAULT, KILL_AT = 24, 200, 16, 5
+MIN_SCALING = 1.3           # R=2 must beat R=1 by at least this factor
+
+
+def _batches(queries, n_batches):
+    for j in range(n_batches):
+        yield queries[np.arange(j * BS, (j + 1) * BS) % len(queries)]
+
+
+def _rewrap(cluster, ccfg, **kw):
+    return LiraCluster([g.engine for g in cluster.groups],
+                       [g.row_ids for g in cluster.groups], ccfg, **kw)
+
+
+def _makespan(cluster) -> float:
+    """Busiest replica's effective busy time — the parallel-pod completion
+    time for the stream."""
+    return max(m.busy_s for g in cluster.groups for m in g.members)
+
+
+def run(emit):
+    ds = make_vector_dataset(n=N, n_queries=NQ, dim=DIM, n_modes=8, seed=SEED)
+    mesh = make_test_mesh()
+    base = LiraCluster.build(
+        mesh, ds.base, BuildConfig(
+            n_partitions=B, k=K, eta=0.03, train_frac=0.4, epochs=2,
+            nprobe_max=B, rerank=RERANK, seed=SEED),
+        ClusterConfig(n_shards=S, n_replicas=1, seed=SEED),
+        clock=FakeClock())
+    base.search(SearchRequest(queries=ds.queries[:BS], sigma=-1.0))  # warm jit
+
+    # ------------------------------------------------- throughput scaling vs R
+    thr = {}
+    for r in (1, 2):
+        cl = _rewrap(base, ClusterConfig(n_shards=S, n_replicas=r,
+                                         hedging=False, seed=SEED),
+                     clock=FakeClock())
+        rows = 0
+        for q in _batches(ds.queries, N_THROUGHPUT):
+            rows += cl.search(SearchRequest(queries=q, sigma=-1.0)).dists.shape[0]
+        makespan = _makespan(cl)
+        thr[f"r{r}"] = {"rows": rows, "makespan_s": round(makespan, 6),
+                        "rows_per_s": round(rows / makespan, 1)}
+    scaling = thr["r2"]["rows_per_s"] / thr["r1"]["rows_per_s"]
+    assert scaling >= MIN_SCALING, (
+        f"R=2 throughput scaled only {scaling:.2f}× over R=1 "
+        f"(gate {MIN_SCALING}×): routing is not spreading load")
+    emit("cluster/throughput_scaling_r2_over_r1", scaling * 1e6,
+         f"r1={thr['r1']['rows_per_s']}rps r2={thr['r2']['rows_per_s']}rps")
+
+    # ------------------------------------------------ p99 with/without hedging
+    tails, regs = {}, {}
+    for mode, hedging in (("unhedged", False), ("hedged", True)):
+        regs[mode] = reg = MetricsRegistry()
+        cl = _rewrap(base, ClusterConfig(n_shards=S, n_replicas=3,
+                                         hedging=hedging, seed=SEED),
+                     clock=FakeClock(), fixed_service_s=SERVICE_S, metrics=reg)
+        lats = []
+        for i, q in enumerate(_batches(ds.queries, N_TAIL)):
+            if i == 20:  # healthy hedge-warmup history first
+                for g in cl.groups:
+                    g.router.replicas[0].latency_scale = STRAGGLER
+            lats.append(cl.search(SearchRequest(queries=q, sigma=-1.0))
+                        .stats.latency_ms)
+        tails[mode] = float(np.quantile(lats[20:], 0.99))
+    hedges = regs["hedged"].counter("lira_hedges_total").total()
+    hedge_wins = regs["hedged"].counter("lira_hedge_wins_total").total()
+    assert hedges > 0, "straggler never hedged: deadline policy is dead"
+    assert tails["hedged"] < STRAGGLER * SERVICE_S * 1e3, (
+        f"hedged p99 {tails['hedged']:.2f}ms still at the straggler's "
+        f"{STRAGGLER * SERVICE_S * 1e3:.0f}ms")
+    assert tails["hedged"] < tails["unhedged"], "hedging did not cut the tail"
+    p99_ratio = tails["hedged"] / tails["unhedged"]
+    emit("cluster/hedged_p99_ms", tails["hedged"] * 1e3,
+         f"unhedged={tails['unhedged']:.2f}ms hedges={hedges:.0f}")
+
+    # --------------------------------------- fault injection: zero lost queries
+    _, gti = gt.exact_knn(ds.queries, ds.base, K)
+    runs = {}
+    for mode in ("reference", "killed"):
+        reg = MetricsRegistry()
+        cl = _rewrap(base, ClusterConfig(n_shards=S, n_replicas=2, seed=SEED),
+                     clock=FakeClock(), fixed_service_s=SERVICE_S, metrics=reg)
+        ids, rows = [], 0
+        for i, q in enumerate(_batches(ds.queries, N_FAULT)):
+            if mode == "killed" and i == KILL_AT:
+                cl.fail_replica(0, 0, inflight=True)
+            res = cl.search(SearchRequest(queries=q, sigma=-1.0))
+            ids.append(np.asarray(res.ids))
+            rows += res.ids.shape[0]
+        runs[mode] = {
+            "ids": np.concatenate(ids, 0), "rows": rows,
+            "requeued": sum(g.router.requeued for g in cl.groups),
+            "failovers": int(reg.counter("lira_failovers_total").total()),
+        }
+    expected_rows = N_FAULT * BS
+    lost = expected_rows - runs["killed"]["rows"]
+    assert lost == 0, f"{lost} query rows lost across the replica kill"
+    assert runs["killed"]["requeued"] == 1, (
+        f"expected exactly 1 replayed in-flight batch, "
+        f"got {runs['killed']['requeued']}")
+    assert np.array_equal(runs["killed"]["ids"], runs["reference"]["ids"]), \
+        "replica kill changed answers (replay is not transparent)"
+    gt_tile = np.concatenate(
+        [gti[np.arange(j * BS, (j + 1) * BS) % NQ] for j in range(N_FAULT)], 0)
+    rec = {m: float(recall_at_k(runs[m]["ids"], gt_tile, K)) for m in runs}
+    assert rec["killed"] == rec["reference"], (
+        f"recall moved across the kill: {rec}")
+    emit("cluster/fault_requeued", runs["killed"]["requeued"],
+         f"lost={lost} recall={rec['killed']:.4f}")
+
+    return {
+        "suite": "cluster",
+        "config": {"n": N, "dim": DIM, "shards": S, "partitions_per_shard": B,
+                   "k": K, "batch_rows": BS, "straggler_scale": STRAGGLER,
+                   "service_s": SERVICE_S, "min_scaling": MIN_SCALING},
+        "throughput": {**thr,
+                       "scaling_r2_over_r1": round(scaling, 4)},
+        "hedging": {"p99_ms_unhedged": round(tails["unhedged"], 4),
+                    "p99_ms_hedged": round(tails["hedged"], 4),
+                    "p99_ratio": round(p99_ratio, 4),
+                    "hedges": int(hedges), "hedge_wins": int(hedge_wins)},
+        "fault": {"batches": N_FAULT, "kill_at": KILL_AT,
+                  "lost_queries": int(lost),
+                  "requeued": runs["killed"]["requeued"],
+                  "failovers": runs["killed"]["failovers"],
+                  "recall_reference": round(rec["reference"], 4),
+                  "recall_killed": round(rec["killed"], 4),
+                  "ids_identical": True},
+    }

@@ -25,6 +25,13 @@ Metrics tracked:
     what's left is queueing + scheduling overhead, which is exactly what
     front-end/engine changes can regress. Fails when the fresh ratio rises
     more than ``max_regression`` above the committed one.
+  * cluster (higher is better): throughput.scaling_r2_over_r1 — R=2 vs R=1
+    replica-group throughput over the same batch stream, a dimensionless
+    load-spreading ratio (box speed cancels between the two wraps);
+  * cluster (LOWER is better): hedging.p99_ratio — hedged p99 normalized by
+    the unhedged p99 of the same seeded straggler stream; the policy runs on
+    ``fixed_service_s`` virtual latencies, so the ratio is exactly
+    deterministic.
 
 A missing committed snapshot skips that metric with a warning (first run of
 a new suite must be able to land its own baseline); a missing FRESH payload
@@ -87,6 +94,10 @@ METRICS = [
      _path_ratio("adc_interpret.frac_of_hbm_bw", "adc.frac_of_hbm_bw"),
      True),
     ("serving", "serving/p99_batches_at_0.8x", _serving_p99_batches, False),
+    ("cluster", "cluster/throughput_scaling_r2_over_r1",
+     lambda p: float(_get(p, "throughput.scaling_r2_over_r1")), True),
+    ("cluster", "cluster/hedged_p99_ratio",
+     lambda p: float(_get(p, "hedging.p99_ratio")), False),
 ]
 
 

@@ -28,6 +28,7 @@ SUITES = [
     ("scan_paths", "benchmarks.scan_paths"),
     ("serving", "benchmarks.serving_frontend"),
     ("churn", "benchmarks.churn"),
+    ("cluster", "benchmarks.cluster"),
     ("fig2", "benchmarks.fig2_motivation"),
     ("fig11", "benchmarks.fig11_convergence"),
     ("table1", "benchmarks.table1_vary_k"),

@@ -1,1 +1,7 @@
+from repro.distributed.fault import (  # noqa: F401  (replica-group policies)
+    Replica,
+    ReplicaFailure,
+    ReplicaRouter,
+    StragglerMitigator,
+)
 from repro.distributed.sharding import LOGICAL_RULES, logical_to_pspec, batch_axes, seq_axis  # noqa: F401

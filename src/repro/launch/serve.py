@@ -1,6 +1,7 @@
 """Serving launcher: build a LIRA index and serve query batches through the
-distributed engine, with replica routing + hedged-straggler simulation for
-the multi-pod control plane (DESIGN.md §5).
+distributed engine, then through a real multi-pod ``LiraCluster`` — LANNS
+shards × replica groups with routed/hedged dispatch and a mid-stream replica
+kill (DESIGN.md §5).
 
     PYTHONPATH=src python -m repro.launch.serve --n 20000 --queries 1024
 """
@@ -12,9 +13,15 @@ import time
 import numpy as np
 
 from repro.data import make_vector_dataset
-from repro.distributed.fault import ReplicaRouter, StragglerMitigator
 from repro.launch.mesh import make_test_mesh
-from repro.serving import BuildConfig, LiraEngine, SearchRequest, tiers
+from repro.serving import (
+    BuildConfig,
+    ClusterConfig,
+    LiraCluster,
+    LiraEngine,
+    SearchRequest,
+    tiers,
+)
 
 
 def main():
@@ -23,7 +30,10 @@ def main():
     ap.add_argument("--queries", type=int, default=1024)
     ap.add_argument("--partitions", type=int, default=32)
     ap.add_argument("--sigma", type=float, default=0.3)
-    ap.add_argument("--pods", type=int, default=2, help="simulated index replicas")
+    ap.add_argument("--pods", type=int, default=2,
+                    help="replicas per shard in the serving cluster")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="LANNS level-1 shards in the serving cluster")
     ap.add_argument("--tier", default="f32", choices=tiers.names(),
                     help="serving tier (serving/tiers.py registry): f32 exact "
                          "scan | pq ADC shortlist + exact rerank | residual_pq "
@@ -117,15 +127,33 @@ def main():
     finally:
         engine.frontend = None
 
-    # multi-pod control plane: route batches over replicas, kill one mid-stream
-    router = ReplicaRouter(args.pods)
-    served = router.dispatch(64, fail_at=(20, 0))
-    print(f"  replica failover: served={served} (replica 0 killed at batch 20, "
-          f"{router.requeued} re-queued)")
-    mit = StragglerMitigator(ReplicaRouter(args.pods))
-    rng = np.random.default_rng(0)
-    lat = [mit.serve(float(rng.lognormal(0, 0.2))) for _ in range(200)]
-    print(f"  hedged p99={np.quantile(lat, 0.99):.2f}× base ({mit.hedges} hedges)")
+    # multi-pod control plane: a REAL LiraCluster — LANNS shards × replica
+    # groups serving the same corpus, with routed/hedged dispatch and one
+    # replica killed mid-stream (its in-flight batch replays; nothing is lost)
+    print(f"building {args.shards}-shard × {args.pods}-replica cluster…")
+    cluster = LiraCluster.build(mesh, ds.base, BuildConfig(
+        n_partitions=max(8, args.partitions // args.shards), k=10, eta=0.05,
+        train_frac=0.4, epochs=5, tier=tier, rerank=args.rerank,
+        impl=args.impl),
+        ClusterConfig(n_shards=args.shards, n_replicas=args.pods,
+                      hedge_warmup=8))
+    n_batches, kill_at, bs = 32, 10, 32
+    rows = 0
+    for j in range(n_batches):
+        if j == kill_at and args.pods > 1:
+            cluster.fail_replica(0, 0, inflight=True)
+        sel = np.arange(j * bs, (j + 1) * bs) % len(ds.queries)
+        cres = cluster.search(SearchRequest(queries=ds.queries[sel],
+                                            sigma=args.sigma))
+        rows += cres.dists.shape[0]
+    requeued = sum(g.router.requeued for g in cluster.groups)
+    hedges = sum(g.mitigator.hedges for g in cluster.groups)
+    served = {f"s{r['shard']}r{r['replica']}": r["served"]
+              for r in cluster.replica_table()}
+    print(f"  cluster: {rows} rows over {n_batches} batches, served={served} "
+          f"(replica (0,0) killed at batch {kill_at}: {requeued} re-queued, "
+          f"{hedges} hedges, 0 lost); last merge: nprobe "
+          f"mean={cres.nprobe_eff.mean():.2f} routes={cres.stats.routes}")
 
     # registry snapshot: the cumulative counters this process accumulated
     reg = default_registry()

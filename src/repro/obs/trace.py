@@ -13,7 +13,7 @@ another span of the same tracer is open — no ids to thread manually).
 Three design constraints from the serving stack:
 
   * **Deterministic tests** — the clock is injected (``FakeClock`` from
-    serving/frontend.py works as-is: it is callable via ``now``), so span
+    repro/utils/clock.py works as-is: instances are callable), so span
     durations are exact under virtual time.
   * **Zero cost when off** — ``NOOP`` is a shared tracer whose ``span`` is a
     reusable no-op context; production code holds NOOP by default and pays a
@@ -71,9 +71,10 @@ class Span:
 
 class Tracer:
     """Collects nested spans. ``clock`` is any zero-arg callable returning
-    seconds (``time.perf_counter`` by default; pass ``FakeClock(...).now``
-    for virtual time). ``sink`` streams finished spans as JSON-lines to a
-    path or hands the dict to a callable."""
+    seconds (``time.perf_counter`` by default; pass a
+    ``repro.utils.clock.FakeClock`` for virtual time). ``sink`` streams
+    finished spans as JSON-lines to a path or hands the dict to a
+    callable."""
 
     enabled = True
 

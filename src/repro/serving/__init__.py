@@ -7,6 +7,12 @@ from repro.serving.api import (  # noqa: F401  (typed serving surface)
     SearchStats,
 )
 from repro.serving.engine import make_bundle, LiraEngine  # noqa: F401
+from repro.serving.cluster import (  # noqa: F401  (sharded replica-group serving)
+    ClusterConfig,
+    LiraCluster,
+    ShardPlan,
+    plan_shards,
+)
 from repro.serving.frontend import (  # noqa: F401  (dynamic-batching front-end)
     FakeClock,
     FrontendConfig,

@@ -133,6 +133,19 @@ class SearchStats:
     # insert/delete/compact/repartition bumps it (mutations drain the
     # front-end first, so a coalesced batch never spans two epochs).
     epoch: int = 0
+    # ---- cluster-serving fields (serving/cluster.py). For a per-shard
+    # sub-result, shard/replica name who served it; for the merged cluster
+    # answer shard stays None and ``routes`` carries one
+    # ``(shard, replica, hedged, failovers)`` tuple per shard. ``failovers``
+    # counts in-flight replays (dead replicas) absorbed while serving this
+    # call — nonzero means the answer survived a failure, not that it lost
+    # anything.
+    shard: Optional[int] = None     # shard that served (None = single engine
+                                    # or a merged cluster answer)
+    replica: Optional[int] = None   # replica that won within the shard group
+    hedged: bool = False            # a hedge request was issued for this call
+    failovers: int = 0              # in-flight replays absorbed by this call
+    routes: Optional[tuple] = None  # merged answers: per-shard route tuples
 
 
 @dataclasses.dataclass

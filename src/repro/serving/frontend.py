@@ -57,27 +57,10 @@ import numpy as np
 from repro.configs.base import FrontendConfig
 from repro.obs import metrics as obs_metrics
 from repro.serving import api, scan, tiers
+from repro.utils.clock import FakeClock  # noqa: F401  (canonical home; re-exported)
 
 __all__ = ["FakeClock", "FrontendConfig", "FrontendStats", "PendingSearch",
            "ServingFrontend", "simulate_open_loop"]
-
-
-class FakeClock:
-    """Deterministic injectable clock: time moves only via ``advance``. Used
-    by the scheduler tests (no wall-clock sleeps in tier-1) and the open-loop
-    load simulation, where measured service time is charged explicitly."""
-
-    def __init__(self, start: float = 0.0):
-        self._t = float(start)
-
-    def __call__(self) -> float:
-        return self._t
-
-    def advance(self, dt: float) -> float:
-        if dt < 0:
-            raise ValueError(f"clock cannot go backwards (dt={dt})")
-        self._t += float(dt)
-        return self._t
 
 
 @dataclasses.dataclass(frozen=True)

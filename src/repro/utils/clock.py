@@ -1,0 +1,35 @@
+"""Canonical injectable clocks for the serving stack.
+
+Every time-dependent layer (serving/frontend.py batching deadlines,
+obs/trace.py span durations, distributed/fault.py heartbeats and hedge
+deadlines, serving/cluster.py failover) takes a zero-arg ``clock`` callable
+returning seconds instead of reading wall time directly. ``FakeClock`` is
+the one deterministic implementation they all share: time moves only via
+``advance``, so scheduler/failover tests never sleep and latency assertions
+are exact. Production callers pass ``time.monotonic`` (scheduling) or
+``time.perf_counter`` (durations).
+
+Historically ``FakeClock`` lived in serving/frontend.py; it is re-exported
+from there (and ``repro.serving``) for back-compat.
+"""
+from __future__ import annotations
+
+__all__ = ["FakeClock"]
+
+
+class FakeClock:
+    """Deterministic injectable clock: time moves only via ``advance``. Used
+    by the scheduler tests (no wall-clock sleeps in tier-1) and the open-loop
+    load simulation, where measured service time is charged explicitly."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot go backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t

@@ -1,0 +1,339 @@
+"""Cluster serving tests (repro.serving.cluster) — ISSUE 10.
+
+The load-bearing gate is cross-shard merge parity: an S-shard × R-replica
+``LiraCluster`` (each shard its own k-means/probing model/tier store) must
+serve bit-identical distances and set-identical ids vs a single-engine
+oracle built over the union corpus. Exactness conditions: σ=-1 probes every
+partition on both sides (per-shard probing models become irrelevant), and
+rerank·k ≥ capacity makes the PQ tiers' shortlist cover whole partitions so
+their exact f32 rerank sees every row — then per-shard answers are exact
+over each shard's rows and the dedup_topk merge of per-shard top-k equals
+the global top-k. η>0 is on throughout, so replica dedup rides the same
+gate.
+
+Control-plane tests (routing, hedging, heartbeat failover, in-flight
+replay) run on re-wrapped clusters: fresh routers/mitigators over the
+module-scoped built engines — engines hold no control-plane state, so
+re-wrapping is free and keeps fault injection away from the parity
+fixtures. All time is FakeClock; service is ``fixed_service_s`` — no
+wall-clock anywhere.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import FrontendConfig
+from repro.data import make_vector_dataset
+from repro.launch.mesh import make_test_mesh
+from repro.obs import MetricsRegistry
+from repro.serving import (
+    BuildConfig,
+    ClusterConfig,
+    LiraCluster,
+    LiraEngine,
+    SearchRequest,
+    plan_shards,
+)
+from repro.utils.clock import FakeClock
+
+N, NQ, DIM, K = 360, 16, 16, 5
+B_SHARD, B_ORACLE = 4, 8
+PQ_M, PQ_KS, RERANK = 4, 32, 64   # rerank·k = 320 ≥ any partition capacity
+TIERS = ("f32", "pq", "residual_pq")
+SERVICE_S = 1e-3                  # deterministic virtual service time
+
+
+def _bc(tier, n_partitions=B_SHARD):
+    return BuildConfig(
+        n_partitions=n_partitions, k=K, eta=0.05, train_frac=0.5, epochs=2,
+        nprobe_max=n_partitions, tier=tier, pq_m=PQ_M, pq_ks=PQ_KS,
+        rerank=RERANK, seed=9)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset(n=N, n_queries=NQ, dim=DIM, n_modes=8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def rigs(ds):
+    """Per tier: (2-shard × 2-replica cluster, union-corpus oracle engine).
+    Parity tests treat these as read-only; fault tests re-wrap the engines."""
+    mesh = make_test_mesh()
+    out = {}
+    for tier in TIERS:
+        cluster = LiraCluster.build(
+            mesh, ds.base, _bc(tier),
+            ClusterConfig(n_shards=2, n_replicas=2, seed=1),
+            clock=FakeClock(), fixed_service_s=SERVICE_S)
+        oracle = LiraEngine.build(mesh, ds.base, _bc(tier, B_ORACLE))
+        out[tier] = (cluster, oracle)
+    return out
+
+
+def _rewrap(cluster, ccfg, **kwargs):
+    """Fresh control plane (routers/mitigators/members) over already-built
+    shard engines — how fault tests isolate their injected state."""
+    return LiraCluster([g.engine for g in cluster.groups],
+                       [g.row_ids for g in cluster.groups],
+                       dataclasses.replace(ccfg, n_shards=len(cluster.groups)),
+                       **kwargs)
+
+
+def _ids_set_equal(a, b):
+    return all(set(ra[ra >= 0]) == set(rb[rb >= 0]) for ra, rb in zip(a, b))
+
+
+# ------------------------------------------------------------------ parity
+
+@pytest.mark.parametrize("tier", TIERS)
+@pytest.mark.parametrize("impl", ("ref", "interpret"))
+def test_cluster_matches_union_oracle(rigs, ds, tier, impl):
+    cluster, oracle = rigs[tier]
+    rc = cluster.search(SearchRequest(queries=ds.queries, sigma=-1.0,
+                                      impl=impl))
+    ro = oracle.search(SearchRequest(queries=ds.queries, sigma=-1.0,
+                                     impl=impl))
+    np.testing.assert_array_equal(rc.dists, ro.dists)
+    assert _ids_set_equal(rc.ids, ro.ids)
+    # η>0 replica dedup held through both merge levels: no duplicate ids
+    for row in rc.ids:
+        valid = row[row >= 0]
+        assert len(set(valid)) == len(valid)
+
+
+def test_merged_answer_speaks_global_ids(rigs, ds):
+    cluster, _ = rigs["f32"]
+    res = cluster.search(SearchRequest(queries=ds.queries, sigma=-1.0))
+    owner = {}
+    for g in cluster.groups:
+        for gid in g.row_ids:
+            owner[int(gid)] = g.sid
+    for row, routes in zip(res.ids, [res.stats.routes] * len(res.ids)):
+        for gid in row[row >= 0]:
+            assert int(gid) in owner  # every id is a real global id
+    assert len(res.stats.routes) == len(cluster.groups)
+
+
+def test_cross_shard_merge_dedups_overlapping_shards(rigs, ds):
+    """Two shards holding the SAME rows: the pool carries every id twice and
+    the merge must collapse each to its best distance — the η>0 mechanism at
+    cluster level, made deterministic."""
+    cluster, _ = rigs["f32"]
+    g = cluster.groups[0]
+    twin = LiraCluster([g.engine, g.engine], [g.row_ids, g.row_ids],
+                       ClusterConfig(n_shards=2, n_replicas=1, seed=0),
+                       clock=FakeClock(), fixed_service_s=SERVICE_S)
+    solo = g.engine.search(SearchRequest(queries=ds.queries, sigma=-1.0))
+    both = twin.search(SearchRequest(queries=ds.queries, sigma=-1.0))
+    np.testing.assert_array_equal(both.dists, solo.dists)
+    gids = np.where(solo.ids >= 0,
+                    g.row_ids[np.clip(solo.ids, 0, None)], -1)
+    np.testing.assert_array_equal(both.ids, gids)
+    assert both.stats.dedup_hits >= NQ * K  # every candidate was duplicated
+
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_midstream_replica_failure_preserves_answers(rigs, ds, tier):
+    """A replica dies with a batch in flight: the batch replays on its
+    sibling and every answer still matches the oracle — zero lost queries,
+    recall (in fact bit-identical results) preserved."""
+    cluster, oracle = rigs[tier]
+    cl = _rewrap(cluster, ClusterConfig(n_replicas=2, seed=1),
+                 clock=FakeClock(), fixed_service_s=SERVICE_S,
+                 metrics=MetricsRegistry())
+    cl.fail_replica(0, 0, inflight=True)
+    want = oracle.search(SearchRequest(queries=ds.queries, sigma=-1.0))
+    n_batches = 6
+    for _ in range(n_batches):
+        got = cl.search(SearchRequest(queries=ds.queries, sigma=-1.0))
+        np.testing.assert_array_equal(got.dists, want.dists)
+        assert _ids_set_equal(got.ids, want.ids)
+    router = cl.groups[0].router
+    assert router.requeued == 1          # exactly the in-flight batch
+    assert not router.replicas[0].healthy
+    # every batch served exactly once despite the death
+    assert sum(r.served for r in router.replicas) >= n_batches
+    assert cl.metrics.counter("lira_failovers_total").total() == 1.0
+
+
+# ----------------------------------------------------------- shard planning
+
+def test_plan_shards_hash_covers_and_balances():
+    x = np.random.default_rng(0).normal(size=(400, 8)).astype(np.float32)
+    plan = plan_shards(x, 4, mode="hash")
+    assert plan.assign.shape == (400,) and plan.centroids is None
+    counts = np.bincount(plan.assign, minlength=4)
+    assert counts.sum() == 400 and counts.min() > 0
+    assert counts.max() < 2.0 * counts.mean()  # hash balance, loose bound
+    # stable: same ids → same shards
+    np.testing.assert_array_equal(plan.assign,
+                                  plan_shards(x, 4, mode="hash").assign)
+
+
+def test_plan_shards_kmeans_respects_balance_cap():
+    rng = np.random.default_rng(1)
+    # adversarial: one tight blob, so unconstrained k-means would put
+    # everything in one shard — the cap must force a spill
+    x = (rng.normal(size=(40, 4)) * 0.01).astype(np.float32)
+    plan = plan_shards(x, 2, mode="kmeans", seed=5, balance_slack=1.2)
+    cap = int(np.ceil(40 / 2 * 1.2))
+    counts = np.bincount(plan.assign, minlength=2)
+    assert counts.sum() == 40 and counts.max() <= cap
+    assert plan.centroids.shape == (2, 4)
+
+
+def test_plan_shards_validates():
+    x = np.zeros((10, 4), np.float32)
+    with pytest.raises(ValueError, match="n_shards"):
+        plan_shards(x, 0)
+    with pytest.raises(ValueError, match="unknown shard mode"):
+        plan_shards(x, 2, mode="range")
+
+
+# ------------------------------------------------------------ control plane
+
+def test_routing_spreads_load_across_replicas(rigs, ds):
+    cluster, _ = rigs["f32"]
+    cl = _rewrap(cluster, ClusterConfig(n_replicas=2, seed=3),
+                 clock=FakeClock(), fixed_service_s=SERVICE_S)
+    for _ in range(24):
+        cl.search(SearchRequest(queries=ds.queries[:8], sigma=-1.0))
+    for g in cl.groups:
+        served = [r.served for r in g.router.replicas]
+        assert sum(served) == 24 and min(served) > 0
+
+
+def test_hedging_caps_straggler_latency(rigs, ds):
+    cluster, _ = rigs["f32"]
+    reg = MetricsRegistry()
+    cl = _rewrap(cluster,
+                 ClusterConfig(n_replicas=2, seed=2, hedge_warmup=4),
+                 clock=FakeClock(), fixed_service_s=SERVICE_S, metrics=reg)
+    req = SearchRequest(queries=ds.queries[:8], sigma=-1.0)
+    for _ in range(4):                     # healthy warmup history
+        cl.search(req)
+    for g in cl.groups:                    # replica 0 becomes a straggler
+        g.router.replicas[0].latency_scale = 50.0
+    lats = [cl.search(req).stats.latency_ms for _ in range(20)]
+    assert reg.counter("lira_hedges_total").total() > 0
+    # hedged calls complete at deadline (3× median ≈ 3ms) + healthy service,
+    # never at the straggler's 50ms
+    assert max(lats) < 50.0 * SERVICE_S * 1e3
+    assert reg.counter("lira_hedge_wins_total").total() > 0
+
+
+def test_hedging_off_serves_at_straggler_latency(rigs, ds):
+    cluster, _ = rigs["f32"]
+    cl = _rewrap(cluster,
+                 ClusterConfig(n_replicas=2, seed=2, hedging=False),
+                 clock=FakeClock(), fixed_service_s=SERVICE_S,
+                 metrics=MetricsRegistry())
+    for g in cl.groups:
+        g.router.replicas[0].latency_scale = 50.0
+    lats = [cl.search(SearchRequest(queries=ds.queries[:8], sigma=-1.0))
+            .stats.latency_ms for _ in range(20)]
+    assert cl.metrics.counter("lira_hedges_total").total() == 0
+    assert max(lats) == pytest.approx(50.0 * SERVICE_S * 1e3)
+
+
+def test_heartbeat_stall_detected_and_routed_around(rigs, ds):
+    cluster, _ = rigs["f32"]
+    clock = FakeClock()
+    cl = _rewrap(cluster,
+                 ClusterConfig(n_replicas=2, seed=1, heartbeat_timeout_s=5.0),
+                 clock=clock, fixed_service_s=SERVICE_S)
+    cl.stall_replica(0, 1)
+    clock.advance(10.0)
+    failed = cl.tick()
+    assert failed == [(0, 1, 0)]
+    assert not cl.groups[0].router.replicas[1].healthy
+    for _ in range(6):                     # traffic never lands on the corpse
+        res = cl.search(SearchRequest(queries=ds.queries[:8], sigma=-1.0))
+        assert res.stats.routes[0][1] == 0
+    cl.recover_replica(0, 1)
+    assert cl.groups[0].router.replicas[1].healthy
+
+
+def test_whole_group_dead_raises(rigs, ds):
+    cluster, _ = rigs["f32"]
+    cl = _rewrap(cluster, ClusterConfig(n_replicas=2, seed=1),
+                 clock=FakeClock(), fixed_service_s=SERVICE_S)
+    cl.fail_replica(1, 0)
+    cl.fail_replica(1, 1)
+    with pytest.raises(RuntimeError, match="no healthy replicas"):
+        cl.search(SearchRequest(queries=ds.queries[:8], sigma=-1.0))
+
+
+def test_charge_service_advances_clock(rigs, ds):
+    cluster, _ = rigs["f32"]
+    clock = FakeClock()
+    cl = _rewrap(cluster, ClusterConfig(n_replicas=1, seed=0),
+                 clock=clock, fixed_service_s=SERVICE_S, charge_service=True)
+    cl.search(SearchRequest(queries=ds.queries[:8], sigma=-1.0))
+    assert clock() == pytest.approx(SERVICE_S)
+    with pytest.raises(TypeError, match="advance"):
+        _rewrap(cluster, ClusterConfig(n_replicas=1, seed=0),
+                charge_service=True)
+
+
+# --------------------------------------------------------- stats & surface
+
+def test_cluster_stats_shape(rigs, ds):
+    cluster, _ = rigs["f32"]
+    res = cluster.search(SearchRequest(queries=ds.queries, sigma=-1.0))
+    st = res.stats
+    assert st.shard is None and st.replica is None
+    assert len(st.routes) == 2
+    for sid, rid, hedged, failovers in st.routes:
+        assert 0 <= rid < 2 and isinstance(hedged, bool) and failovers == 0
+    assert st.latency_ms == pytest.approx(SERVICE_S * 1e3)
+    assert st.bucket >= NQ and st.failovers == 0 and not st.hedged
+    assert res.nprobe_eff.shape == (NQ,)
+    table = cluster.replica_table()
+    assert len(table) == 4 and all(row["healthy"] for row in table)
+
+
+def test_search_accepts_raw_arrays_and_rejects_mixed(rigs, ds):
+    cluster, _ = rigs["f32"]
+    a = cluster.search(ds.queries[:8], sigma=-1.0)
+    b = cluster.search(SearchRequest(queries=ds.queries[:8], sigma=-1.0))
+    np.testing.assert_array_equal(a.dists, b.dists)
+    one = cluster.search(ds.queries[0], sigma=-1.0)
+    assert one.dists.shape == (1, K)
+    with pytest.raises(TypeError, match="not both"):
+        cluster.search(SearchRequest(queries=ds.queries[:8]), sigma=-1.0)
+
+
+def test_constructor_validates():
+    with pytest.raises(ValueError, match="row_ids"):
+        LiraCluster([], [])
+    eng = object()
+    with pytest.raises(ValueError, match="shards"):
+        LiraCluster([eng], [np.arange(3)], ClusterConfig(n_shards=2))
+
+
+def test_frontend_over_cluster_is_bit_identical(rigs, ds):
+    """The front-end routing hook: single-query traffic batches through
+    ``ServingFrontend`` onto the cluster; scattered rows must equal a direct
+    cluster batch search (same exactness story as frontend-over-engine)."""
+    cluster, _ = rigs["f32"]
+    cl = _rewrap(cluster, ClusterConfig(n_replicas=2, seed=1),
+                 clock=FakeClock(), fixed_service_s=SERVICE_S)
+    fe = cl.attach_frontend(
+        FrontendConfig(max_batch=8, max_wait_ms=5.0, max_queue=64),
+        clock=FakeClock(), metrics=MetricsRegistry())
+    try:
+        pend = [fe.submit(SearchRequest(queries=ds.queries[i], sigma=-1.0))
+                for i in range(3)]
+        last = cl.search_one(SearchRequest(queries=ds.queries[3], sigma=-1.0))
+        fe.drain()
+        direct = cl.search(SearchRequest(queries=ds.queries[:4], sigma=-1.0))
+        rows = [p.result() for p in pend] + [last]
+        for i, r in enumerate(rows):
+            np.testing.assert_array_equal(r.dists[0], direct.dists[i])
+            np.testing.assert_array_equal(r.ids[0], direct.ids[i])
+            assert not r.stats.shed
+    finally:
+        cl.frontend = None

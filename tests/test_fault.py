@@ -7,7 +7,14 @@ are sampling-based, the assertions are exact.
 """
 import pytest
 
-from repro.distributed.fault import Replica, ReplicaRouter, StragglerMitigator
+from repro.distributed.fault import (
+    Replica,
+    ReplicaFailure,
+    ReplicaRouter,
+    StragglerMitigator,
+)
+from repro.obs import MetricsRegistry
+from repro.utils.clock import FakeClock
 
 
 # ---------------------------------------------------------------- routing
@@ -159,3 +166,105 @@ def test_replica_dataclass_defaults():
     r = Replica(rid=7)
     assert (r.healthy, r.inflight, r.served, r.latency_scale) == (
         True, 0, 0, 1.0)
+
+
+# -------------------------------------------------- real dispatch (ISSUE 10)
+
+def test_route_replays_inflight_batch_on_replica_failure():
+    reg = MetricsRegistry()
+    router = ReplicaRouter(2, seed=0, clock=FakeClock(), metrics=reg)
+    doomed = {0}
+
+    def fn(r):
+        if r.rid in doomed:
+            doomed.discard(r.rid)
+            raise ReplicaFailure("connection lost mid-serve")
+        return ("answer", r.rid)
+
+    results = [router.route(fn) for _ in range(6)]
+    assert all(out == ("answer", r.rid) for out, r in results)
+    assert router.requeued == 1          # the one in-flight batch replayed
+    assert not router.replicas[0].healthy
+    assert all(r.rid == 1 for _, r in results)  # survivor absorbed traffic
+    assert reg.counter("lira_failovers_total").total() == 1.0
+    assert reg.gauge("lira_replica_inflight").value(
+        shard="default", replica="1") == 0.0
+
+
+def test_call_stamps_heartbeat_and_check_heartbeats_fails_stale():
+    clock = FakeClock()
+    router = ReplicaRouter(2, seed=0, clock=clock, metrics=MetricsRegistry())
+    clock.advance(3.0)
+    router.call(router.replicas[0], lambda r: "ok")
+    assert router.replicas[0].last_heartbeat == 3.0
+    clock.advance(4.0)                   # replica 1 never heartbeats
+    assert router.check_heartbeats(timeout_s=5.0) == [(1, 0)]
+    assert not router.replicas[1].healthy
+    assert router.replicas[0].healthy    # fresh heartbeat kept it alive
+    router.recover(1)
+    assert router.replicas[1].last_heartbeat == clock()
+
+
+def test_mitigator_run_hedge_first_response_wins():
+    reg = MetricsRegistry()
+    router = ReplicaRouter(2, seed=0, clock=FakeClock(), metrics=reg)
+    router.replicas[1].inflight = 1      # force the straggler as primary
+    mit = StragglerMitigator(router, hedge_factor=3.0)
+    mit.latencies.extend([1.0] * 20)     # warm history, median = 1.0
+
+    def fn(r):
+        return (f"from{r.rid}", 9.0 if r.rid == 0 else 1.0)
+
+    result, winner, eff, hedged = mit.run(fn)
+    # primary (rid 0) blows the 3.0 deadline; the hedge to rid 1 completes
+    # at deadline + 1.0 = 4.0 and wins
+    assert hedged and result == "from1" and winner.rid == 1
+    assert eff == pytest.approx(4.0)
+    assert mit.hedges == 1 and mit.hedge_wins == 1
+    assert reg.counter("lira_hedges_total").total() == 1.0
+    assert reg.counter("lira_hedge_wins_total").total() == 1.0
+
+
+def test_mitigator_run_slow_hedge_is_discounted():
+    router = ReplicaRouter(2, seed=0, clock=FakeClock(),
+                           metrics=MetricsRegistry())
+    router.replicas[1].inflight = 1
+    mit = StragglerMitigator(router, hedge_factor=3.0)
+    mit.latencies.extend([1.0] * 20)
+
+    def fn(r):
+        return (f"from{r.rid}", 9.0 if r.rid == 0 else 50.0)
+
+    result, winner, eff, hedged = mit.run(fn)
+    assert hedged and result == "from0" and winner.rid == 0
+    assert eff == pytest.approx(9.0)     # primary's completion stood
+    assert mit.hedge_wins == 0
+
+
+def test_mitigator_run_dead_hedge_keeps_primary_answer():
+    router = ReplicaRouter(2, seed=0, clock=FakeClock(),
+                           metrics=MetricsRegistry())
+    router.replicas[1].inflight = 1
+    mit = StragglerMitigator(router, hedge_factor=3.0)
+    mit.latencies.extend([1.0] * 20)
+
+    def fn(r):
+        if r.rid == 1:
+            raise ReplicaFailure("hedge target died")
+        return ("primary", 9.0)
+
+    result, winner, eff, hedged = mit.run(fn)
+    assert hedged and result == "primary" and winner.rid == 0
+    assert not router.replicas[1].healthy
+
+
+def test_mitigator_warmup_is_configurable():
+    router = ReplicaRouter(2, seed=4, clock=FakeClock(),
+                           metrics=MetricsRegistry())
+    mit = StragglerMitigator(router, warmup=5)
+    for _ in range(5):                   # healthy history, median = 1.0
+        mit.serve(1.0)
+    router.replicas[0].latency_scale = 50.0
+    lats = [mit.serve(1.0) for _ in range(30)]
+    assert mit.hedges > 0                # hedging armed after only 5 samples
+    assert max(lats) < 50.0
